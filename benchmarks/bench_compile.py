@@ -1,0 +1,73 @@
+"""Paper Table 2 analog: build-time → compile-time adaptation.
+
+In C++ the modifiability cost is recompiling the framework; in JAX it is
+re-tracing + re-lowering + XLA-compiling after a change.  We measure:
+
+  cold     — first jit of a training step (trace+lower+compile)
+  incremental — re-jit after a "source change" (new function object with a
+                changed constant → full retrace+recompile), the analog of
+                touching one file
+  cached   — dispatch cost when nothing changed (jit cache hit)
+
+The paper's claim (orders-of-magnitude cheaper iteration than monolithic
+frameworks) maps to: incremental ≈ cold ≪ a monolithic rebuild, and
+cached ≈ microseconds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.optim import AdamW
+from repro.models import build_model
+from repro.training.train_loop import TrainConfig, make_step_fn
+
+
+def run() -> list[tuple[str, float, str]]:
+    cfg = get_config("gemma3-27b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    tcfg = TrainConfig(steps=10, base_lr=1e-3, warmup=1)
+
+    t0 = time.perf_counter()
+    step = jax.jit(make_step_fn(model, opt, tcfg))
+    out = step(params, opt_state, jnp.int32(0), batch)
+    jax.block_until_ready(out[2]["loss"])
+    cold = time.perf_counter() - t0
+
+    # "incremental rebuild": change one constant in the step function
+    t0 = time.perf_counter()
+    tcfg2 = TrainConfig(steps=10, base_lr=2e-3, warmup=1)
+    step2 = jax.jit(make_step_fn(model, opt, tcfg2))
+    out = step2(params, opt_state, jnp.int32(0), batch)
+    jax.block_until_ready(out[2]["loss"])
+    incremental = time.perf_counter() - t0
+
+    # cache hit dispatch
+    t0 = time.perf_counter()
+    for _ in range(20):
+        out = step2(params, opt_state, jnp.int32(1), batch)
+    jax.block_until_ready(out[2]["loss"])
+    cached = (time.perf_counter() - t0) / 20
+
+    return [
+        ("compile_cold_s", cold, "trace+lower+XLA compile of train step"),
+        ("compile_incremental_s", incremental,
+         f"{incremental/cold:.2f}x of cold (paper: 0.6min vs 34min "
+         "from-scratch)"),
+        ("compile_cached_step_s", cached, "jit cache-hit dispatch+run"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val*1e6:.1f},{derived}")

@@ -1,0 +1,140 @@
+"""§Roofline report: three-term roofline per (arch × shape × mesh) from the
+dry-run artifacts.
+
+Terms (TPU v5e constants; per-chip since post-SPMD HLO is per-device):
+  compute_s    = HLO_dot_FLOPs / 197e12          (bf16 MXU peak)
+  memory_s     = HBM_traffic / 819e9             (HBM bandwidth)
+  collective_s = collective_wire_bytes / 50e9    (per-link ICI)
+
+HLO_dot_FLOPs and collective bytes are loop-corrected (launch/
+hlo_analysis.py — XLA's cost_analysis counts scan bodies once; we multiply
+by known_trip_count).  HBM_traffic is modeled as
+argument_bytes + output_bytes + 2·temp_bytes (every temp written+read
+once) — a fusion-independent lower-bound proxy, documented in
+EXPERIMENTS.md.
+
+Derived metrics:
+  bound_s            = max(term)          (perfect-overlap step-time bound)
+  useful_s           = MODEL_FLOPS / (chips · peak)
+  roofline_fraction  = useful_s / bound_s (MFU at the modeled bound — the
+                       §Perf score)
+  flops_ratio        = MODEL_FLOPS / (chips · HLO_FLOPs)  (remat/redundancy
+                       waste detector)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str, variant: str) -> list[dict]:
+    d = ART / mesh / variant
+    if not d.exists():
+        return []
+    return [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    chips = rec["chips"]
+    ha = rec.get("hlo_analysis") or {}
+    flops = ha.get("dot_flops") or rec["cost"].get("flops", 0)
+    mem = rec["memory"]
+    traffic = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               + 2 * mem.get("temp_size_in_bytes", 0))
+    coll = ha.get("collective_total_bytes",
+                  rec.get("collectives", {}).get("total_bytes", 0))
+    compute_s = flops / PEAK
+    memory_s = traffic / HBM
+    collective_s = coll / ICI
+    bound = max(compute_s, memory_s, collective_s, 1e-12)
+    useful_s = rec["model_flops"] / (chips * PEAK)
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    hbm_per_dev = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0))
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec["variant"], "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "bound_s": bound,
+        "useful_s": useful_s,
+        "roofline_fraction": useful_s / bound,
+        "flops_ratio": rec["model_flops"] / (chips * flops + 1e-9),
+        "dominant": dominant,
+        "hbm_gib_per_dev": hbm_per_dev / 2**30,
+        "over_hbm_budget": hbm_per_dev > 16 * 2**30,
+        "model_flops": rec["model_flops"],
+        "hlo_flops_per_dev": flops,
+        "collective_bytes": ha.get("collective_bytes", {}),
+        "lever": _lever(dominant, rec),
+    }
+
+
+def _lever(dominant: str, rec: dict) -> str:
+    kind = "train" if rec["shape"].startswith("train") else \
+        ("decode" if "decode" in rec["shape"] or "500k" in rec["shape"]
+         else "prefill")
+    if dominant == "compute":
+        return ("reduce recompute (remat policy) and redundant einsum "
+                "transposes; raise per-dot tile efficiency")
+    if dominant == "memory":
+        if kind == "prefill":
+            return ("blockwise attention: kill the O(S^2) scores buffer; "
+                    "chunked CE for big-vocab logits")
+        if kind == "decode":
+            return ("shard the KV cache across more axes; shrink cache "
+                    "dtype; batch more decode slots per chip")
+        return ("activation-checkpoint policy (dots) + chunked CE to cut "
+                "temp traffic")
+    return ("replace all-gathers with flash-decoding partial-stat combine "
+            "/ overlap grad all-reduce with backward (bucketed sync)")
+
+
+def table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | bound_s "
+           "| dominant | MFU@bound | 6ND/HLO | HBM GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        flag = " ⚠" if r["over_hbm_budget"] else ""
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bound_s']:.3e} | {r['dominant']} | "
+            f"{r['roofline_fraction']*100:.1f}% | {r['flops_ratio']:.2f} | "
+            f"{r['hbm_gib_per_dev']:.1f}{flag} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = [r for r in (roofline_row(c)
+                        for c in load_cells(args.mesh, args.variant)) if r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(table(rows))
+    skipped = [c for c in load_cells(args.mesh, args.variant)
+               if c.get("skipped")]
+    for c in skipped:
+        print(f"skipped: {c['arch']} {c['shape']} — {c['skip_reason']}")
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

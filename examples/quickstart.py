@@ -1,0 +1,80 @@
+"""Quickstart: the paper's end-to-end example (Appendix A.4.3),
+MNIST-flavored with synthetic data — Sequential model, SGD, loss/error
+meters, train + eval loops.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nn, optim
+from repro.core.autograd import Variable, noGrad
+from repro.core.data import BatchDataset, TensorDataset
+
+
+def load_dataset(seed=0, n=2048, image_dim=12, classes=10):
+    """Synthetic 'digits': class-dependent blobs on an image grid."""
+    rng = np.random.default_rng(seed)
+    ys = rng.integers(0, classes, n)
+    xs = rng.standard_normal((n, image_dim, image_dim, 1)) * 0.3
+    for i, y in enumerate(ys):
+        r, c = divmod(int(y), 4)
+        xs[i, 2 + 2 * r: 5 + 2 * r, 2 + 2 * c: 5 + 2 * c, 0] += 1.5
+    return xs.astype(np.float32), ys.astype(np.int32)
+
+
+def eval_loop(model, dataset):
+    loss_meter, err_meter, n = 0.0, 0.0, 0
+    model.eval()
+    for bx, by in dataset:
+        inputs = noGrad(jnp.asarray(bx))
+        output = model(inputs)
+        pred = jnp.argmax(output.tensor(), axis=-1)
+        err_meter += float(jnp.sum(pred != jnp.asarray(by)))
+        loss = nn.categoricalCrossEntropy(output, noGrad(jnp.asarray(by)))
+        loss_meter += float(loss.tensor()) * len(by)
+        n += len(by)
+    model.train()
+    return loss_meter / n, 100.0 * err_meter / n
+
+
+def main():
+    image_dim, classes, batch_size = 12, 10, 64
+    xs, ys = load_dataset()
+    val_x, val_y = xs[:256], ys[:256]
+    train_x, train_y = xs[256:], ys[256:]
+    trainset = BatchDataset(TensorDataset([train_x, train_y]), batch_size)
+    valset = BatchDataset(TensorDataset([val_x, val_y]), batch_size)
+
+    model = nn.Sequential(
+        nn.Conv2D(1, 8, 3, 3), nn.ReLU(), nn.Pool2D(2, 2, 2, 2),
+        nn.Conv2D(8, 16, 3, 3), nn.ReLU(), nn.Pool2D(2, 2, 2, 2),
+        nn.View((-1, 3 * 3 * 16)),
+        nn.Linear(3 * 3 * 16, 64), nn.ReLU(), nn.Dropout(0.1),
+        nn.Linear(64, classes), nn.LogSoftmax())
+
+    opt = optim.SGDOptimizer(model.params(), lr=0.1, momentum=0.9)
+    for epoch in range(4):
+        train_loss, nb = 0.0, 0
+        for bx, by in trainset:
+            inputs = noGrad(jnp.asarray(bx))
+            output = model(inputs)
+            target = noGrad(jnp.asarray(by))
+            loss = nn.categoricalCrossEntropy(output, target)
+            train_loss += float(loss.tensor())
+            nb += 1
+            loss.backward()
+            opt.step()
+            opt.zeroGrad()
+        val_loss, val_err = eval_loop(model, valset)
+        print(f"Epoch {epoch}: Avg Train Loss: {train_loss/nb:.4f} "
+              f"Validation Loss: {val_loss:.4f} "
+              f"Validation Error (%): {val_err:.2f}")
+    assert val_err < 20.0, "training failed"
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Batched serving example: continuous batching over cache slots with the
+ServeEngine — multiple requests, slot recycling, greedy decoding.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.serving.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_config("gemma3-27b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=4, max_seq=64)
+
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6], [5, 3, 5, 8, 9, 7],
+               [2, 7, 1, 8], [2, 8, 1], [8, 2, 8, 4]]
+    for uid, p in enumerate(prompts):
+        engine.submit(Request(uid=uid, prompt=p, max_new_tokens=12))
+
+    t0 = time.time()
+    done = engine.run_until_done()
+    dt = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"req {r.uid}: prompt={r.prompt} -> {r.generated}")
+    print(f"[serve_lm] {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s) over {engine.steps} engine steps "
+          f"(batched: {toks/engine.steps:.2f} tok/step)")
+    assert len(done) == len(prompts)
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""§5.2.4 demo: swap the source of truth for primitive tensor ops and the
+ENTIRE stack — core layers, tape autograd, and the production model zoo —
+picks up the new implementation with zero call-site changes.
+
+Three swaps:
+ 1. an instrumented backend that counts every add/matmul,
+ 2. the deferred/fusing backend (ArrayFire-JIT analog),
+ 3. the Pallas-kernel backend (hand-written MXU matmul kernel).
+
+Run:  PYTHONPATH=src python examples/swap_backend.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.tensor import (JnpBackend, ops, register_backend,
+                               use_backend)
+from repro.models import build_model
+
+
+class CountingBackend(JnpBackend):
+    name = "counting"
+
+    def __init__(self):
+        self.counts = {}
+
+    def _bump(self, op):
+        self.counts[op] = self.counts.get(op, 0) + 1
+
+    def add(self, lhs, rhs):
+        self._bump("add")
+        return super().add(lhs, rhs)
+
+    def matmul(self, lhs, rhs):
+        self._bump("matmul")
+        return super().matmul(lhs, rhs)
+
+    def dot_general(self, lhs, rhs, dimension_numbers,
+                    preferred_element_type):
+        self._bump("dot_general")
+        return super().dot_general(lhs, rhs, dimension_numbers,
+                                   preferred_element_type)
+
+
+def main():
+    register_backend("counting", CountingBackend)
+    cfg = get_config("deepseek-v2-lite-16b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, 16), jnp.int32)
+
+    # 1. instrumented swap: every dispatch in a 16B-class MoE+MLA model
+    #    (reduced) flows through the custom backend
+    with use_backend("counting") as cb:
+        logits, _, _ = model.forward(params, toks)
+    print("[swap 1] counting backend saw:", dict(sorted(cb.counts.items())))
+    assert cb.counts.get("dot_general", 0) > 10
+
+    # 2. deferred/fusing backend under the core API
+    with use_backend("lazy") as lb:
+        x = ops.full((64, 64), 1.3)
+        y = ops.tanh(ops.add(ops.mul(x, x), x))
+        val = ops.materialize(y)
+        print(f"[swap 2] lazy: {lb.nodes_built} nodes deferred, "
+              f"{lb.materialize_calls} fused materialization(s), "
+              f"val[0,0]={float(val[0,0]):.4f}")
+
+    # 3. Pallas-kernel backend: matmuls now run the hand-written MXU
+    #    kernel (interpret mode on CPU)
+    with use_backend("pallas") as pb:
+        a = jnp.ones((128, 128), jnp.float32)
+        out = ops.matmul(a, a)
+        print(f"[swap 3] pallas backend: {pb.kernel_calls} kernel call(s), "
+              f"result[0,0]={float(out[0,0])}")
+    assert float(out[0, 0]) == 128.0
+    print("swap_backend OK")
+
+
+if __name__ == "__main__":
+    main()

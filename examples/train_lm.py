@@ -1,0 +1,70 @@
+"""End-to-end driver: train a language model for a few hundred steps with
+the production substrate — real data pipeline (packing, shuffling,
+prefetch), AdamW + cosine schedule, gradient clipping, checkpointing with
+resume, straggler monitoring.
+
+Default is a CI-sized run (~45s); pass ``--preset 100m --steps 300`` for
+the full-size variant on capable hardware (same code path).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.launch.train import make_batches
+from repro.models import build_model, tree_params_count
+from repro.training.train_loop import TrainConfig, train
+import jax
+
+
+PRESETS = {
+    # (arch, reduced, batch, seq, overrides)
+    "ci": ("codeqwen1.5-7b", True, 8, 64, dict(n_layers=2, d_model=128,
+                                               n_heads=4, n_kv_heads=4,
+                                               d_ff=256)),
+    "20m": ("codeqwen1.5-7b", True, 8, 128, dict(n_layers=6, d_model=384,
+                                                 n_heads=6, n_kv_heads=6,
+                                                 d_ff=1024)),
+    "100m": ("codeqwen1.5-7b", True, 8, 256, dict(n_layers=12, d_model=768,
+                                                  n_heads=12, n_kv_heads=12,
+                                                  d_ff=2048,
+                                                  vocab_size=8192)),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    arch, reduced, batch, seq, overrides = PRESETS[args.preset]
+    cfg = get_config(arch, reduced=reduced, **overrides)
+    model = build_model(cfg)
+    n = tree_params_count(model.abstract_params())
+    print(f"[train_lm] preset={args.preset} params={n/1e6:.1f}M "
+          f"batch={batch} seq={seq} steps={args.steps}")
+
+    params = model.init(jax.random.PRNGKey(0))
+    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_")
+    tcfg = TrainConfig(steps=args.steps, base_lr=3e-3,
+                       warmup=max(5, args.steps // 20),
+                       checkpoint_dir=ckpt_dir, checkpoint_every=100)
+    batches = make_batches(cfg, batch, seq, args.steps)
+    params, history = train(model, params, batches, tcfg)
+    first = np.mean([h["loss"] for h in history[:10]])
+    last = np.mean([h["loss"] for h in history[-10:]])
+    tput = batch * seq / np.median([h["sec"] for h in history[5:]])
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f}; "
+          f"{tput:,.0f} tokens/s; checkpoints in {ckpt_dir}")
+    assert last < first, "loss did not decrease"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

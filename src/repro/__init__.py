@@ -1,0 +1,4 @@
+"""repro: Flashlight (ICML 2022) in JAX — open tensor/memory/distributed
+interfaces, tape autograd, and a multi-pod production substrate."""
+
+__version__ = "0.1.0"

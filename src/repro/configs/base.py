@@ -1,0 +1,207 @@
+"""Model configuration system + architecture registry.
+
+Every assigned architecture is a ``ModelConfig`` in ``configs/<id>.py``,
+selectable by ``--arch <id>`` in the launchers.  ``reduced()`` yields the
+smoke-test variant of the same family (small widths/layers/experts, tiny
+vocab) exercised on CPU.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int
+    n_shared: int
+    top_k: int
+    d_expert: int                    # per-expert FFN hidden dim
+    first_k_dense: int = 0           # leading dense layers
+    every: int = 1                   # MoE on layers where (i % every == every-1)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001   # load-balance loss coefficient
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int | None          # None = direct q projection
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None      # default d_model // n_heads
+
+    # attention flavor
+    attention: str = "gqa"           # gqa | mla | none
+    rope_theta: float = 10000.0
+    # per-layer sliding windows: window_pattern[i % len] (0 = global).
+    window_pattern: tuple[int, ...] = ()
+    mla: MLAConfig | None = None
+
+    # mixture of experts
+    moe: MoEConfig | None = None
+
+    # state-space layers
+    ssm: SSMConfig | None = None
+    # hybrid layout: string over {"A","M"} per layer within a repeating group
+    hybrid_pattern: str = ""
+
+    # encoder-decoder
+    encoder_layers: int = 0
+    # vlm
+    num_image_tokens: int = 0
+
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu | gelu
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # multi-token prediction depth (deepseek-v3 MTP); 0 = off
+    mtp_depth: int = 0
+
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    cache_dtype: str = "compute"     # compute | fp8 (quantized KV cache)
+
+    # runtime/perf knobs (hillclimbed in §Perf)
+    remat: str = "full"              # none | full | dots
+    scan_layers: bool = True
+    attention_impl: str = "ref"      # ref | pallas
+    moe_impl: str = "scatter"        # scatter | dense  (dense = oracle)
+    ce_impl: str = "dense"           # dense | chunked  (chunked = low-mem CE)
+    source: str = ""                 # provenance note
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def resolved_cache_dtype(self):
+        if self.cache_dtype == "fp8":
+            return jnp.float8_e4m3fn
+        return self.compute_dtype
+
+    def layer_kind(self, i: int) -> str:
+        """'A' attention(+mlp/moe) | 'M' mamba(+mlp/moe) for layer i."""
+        if self.family == "ssm":
+            return "M"
+        if self.hybrid_pattern:
+            return self.hybrid_pattern[i % len(self.hybrid_pattern)]
+        return "A"
+
+    def window_for_layer(self, i: int) -> int:
+        if not self.window_pattern:
+            return 0
+        return self.window_pattern[i % len(self.window_pattern)]
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        if i < self.moe.first_k_dense:
+            return False
+        return (i % self.moe.every) == (self.moe.every - 1)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+# -- registry ----------------------------------------------------------------
+
+ARCHS: tuple[str, ...] = (
+    "deepseek_v3_671b", "deepseek_v2_lite_16b", "gemma3_27b",
+    "starcoder2_7b", "granite_34b", "codeqwen15_7b", "mamba2_370m",
+    "jamba_v01_52b", "whisper_medium", "paligemma_3b",
+)
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+_ALIAS.update({
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "gemma3-27b": "gemma3_27b",
+    "starcoder2-7b": "starcoder2_7b",
+    "granite-34b": "granite_34b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "mamba2-370m": "mamba2_370m",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "whisper-medium": "whisper_medium",
+    "paligemma-3b": "paligemma_3b",
+})
+
+
+def get_config(arch: str, reduced: bool = False, **overrides) -> ModelConfig:
+    mod_name = _ALIAS.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg = mod.reduced_config() if reduced else mod.config()
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    return cfg
+
+
+def list_archs() -> list[str]:
+    return [a.replace("_", "-") for a in ARCHS]
+
+
+# -- input shapes (assignment) -------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: SSM / hybrid / local-attention
+# archs only (see DESIGN.md §5).
+LONG_CONTEXT_ARCHS = {"gemma3_27b", "mamba2_370m", "jamba_v01_52b"}
+
+
+def cells() -> list[tuple[str, str, str | None]]:
+    """All 40 (arch, shape) cells; third item is a skip-reason or None."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES.values():
+            reason = None
+            if shape.name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                reason = ("pure full-attention architecture: 500k context "
+                          "requires sub-quadratic attention (DESIGN.md §5)")
+            out.append((arch, shape.name, reason))
+    return out

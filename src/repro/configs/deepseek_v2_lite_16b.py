@@ -1,0 +1,42 @@
+"""DeepSeek-V2-Lite 16B [arXiv:2405.04434; hf].
+
+Assignment spec: 27L d_model=2048 16H d_ff=1408 vocab=102400, MoE 64e
+top-6, MLA kv_lora=512, 2 shared.  (The bracket's "160 routed" is the
+V2-236B figure; the primary "MoE 64e" wins — HF config confirms 64 routed
+experts for Lite.)  Gaps from HF: layer 0 dense with ff=10944, no q-lora,
+qk_nope=128 / qk_rope=64 / v_head=128.
+"""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe",
+        n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=10944, vocab_size=102400,
+        attention="mla",
+        mla=MLAConfig(q_lora_rank=None, kv_lora_rank=512, qk_nope_dim=128,
+                      qk_rope_dim=64, v_head_dim=128),
+        moe=MoEConfig(n_routed=64, n_shared=2, top_k=6, d_expert=1408,
+                      first_k_dense=1, every=1),
+        rope_theta=10000.0, norm="rmsnorm", act="silu",
+        source="arXiv:2405.04434 + hf:deepseek-ai/DeepSeek-V2-Lite",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="deepseek-v2-lite-smoke", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=512,
+        attention="mla",
+        mla=MLAConfig(q_lora_rank=None, kv_lora_rank=16, qk_nope_dim=16,
+                      qk_rope_dim=8, v_head_dim=16),
+        moe=MoEConfig(n_routed=8, n_shared=2, top_k=2, d_expert=32,
+                      first_k_dense=1, every=1, capacity_factor=2.0),
+        rope_theta=10000.0, norm="rmsnorm", act="silu",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

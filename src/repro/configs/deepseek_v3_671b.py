@@ -1,0 +1,42 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437; hf].
+
+Assignment spec: 61L d_model=7168 128H d_ff=2048 vocab=129280, MoE 256e
+top-8, MLA, 1 shared + 256 routed, MTP.  Gaps filled from the HF config:
+first 3 layers dense with ff=18432 (the assignment's d_ff=2048 is the
+routed-expert intermediate size), MLA ranks q_lora=1536 / kv_lora=512 /
+qk_nope=128 / qk_rope=64 / v_head=128.
+"""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b", family="moe",
+        n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+        d_ff=18432, vocab_size=129280,
+        attention="mla",
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                      qk_rope_dim=64, v_head_dim=128),
+        moe=MoEConfig(n_routed=256, n_shared=1, top_k=8, d_expert=2048,
+                      first_k_dense=3, every=1),
+        rope_theta=10000.0, norm="rmsnorm", act="silu", mtp_depth=1,
+        source="arXiv:2412.19437 + hf:deepseek-ai/DeepSeek-V3",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="deepseek-v3-671b-smoke", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=512,
+        attention="mla",
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                      qk_rope_dim=8, v_head_dim=16),
+        moe=MoEConfig(n_routed=8, n_shared=1, top_k=2, d_expert=32,
+                      first_k_dense=1, every=1, capacity_factor=2.0),
+        rope_theta=10000.0, norm="rmsnorm", act="silu", mtp_depth=1,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

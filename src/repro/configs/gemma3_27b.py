@@ -1,0 +1,38 @@
+"""Gemma-3 27B [hf:google/gemma-3-27b-pt pattern; assignment-verified tier:
+unverified].
+
+Assignment spec: 62L d_model=5376 32H (kv=16) d_ff=21504 vocab=262144,
+5 local:1 global interleave, 128k context.  Gaps from the gemma family:
+head_dim=128 (decoupled from d_model), sliding window 1024, gated-GELU MLP,
+tied embeddings.  Single rope_theta (gemma3's dual local/global theta noted
+as a deviation in DESIGN.md).  62 = 10 full (5L+1G) groups + 2 trailing
+local layers — the stage planner scans the 10 groups and unrolls the tail.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b", family="dense",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+        d_ff=21504, vocab_size=262144,
+        window_pattern=(1024, 1024, 1024, 1024, 1024, 0),
+        rope_theta=10000.0, norm="rmsnorm", act="geglu",
+        tie_embeddings=True,
+        source="hf:google/gemma-3-27b-pt (family-pattern fill-ins)",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="gemma3-27b-smoke", family="dense",
+        n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+        window_pattern=(16, 16, 16, 16, 16, 0),
+        rope_theta=10000.0, norm="rmsnorm", act="geglu",
+        tie_embeddings=True,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

@@ -1,0 +1,36 @@
+"""Granite 34B code [arXiv:2405.04324; hf].
+
+Assignment spec: 88L d_model=6144 48H (kv=1, MQA) d_ff=24576 vocab=49152.
+head_dim = 6144/48 = 128.  The assignment note says "llama-arch", but with
+a gated (3-matrix) MLP these dims give ~47B params; the 34B total is only
+consistent with GPTBigCode's non-gated 2-matrix MLP (which is also what
+hf:ibm-granite/granite-34b-code-base ships: GPTBigCode + MQA).  We follow
+the parameter-count-consistent reading: LayerNorm + non-gated GELU MLP
+(33.8B params).  kv=1 means the kv-head axis cannot shard over the model
+axis — the rules engine replicates it and decode uses sequence-sharded
+flash-decoding instead (DESIGN.md §5).
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b", family="dense",
+        n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+        d_ff=24576, vocab_size=49152,
+        rope_theta=10000.0, norm="layernorm", act="gelu",
+        source="arXiv:2405.04324 + hf:ibm-granite/granite-34b-code-base",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="granite-34b-smoke", family="dense",
+        n_layers=4, d_model=64, n_heads=8, n_kv_heads=1,
+        d_ff=128, vocab_size=512,
+        rope_theta=10000.0, norm="rmsnorm", act="silu",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

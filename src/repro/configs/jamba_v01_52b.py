@@ -1,0 +1,43 @@
+"""Jamba v0.1 52B [arXiv:2403.19887; hf].
+
+Assignment spec: 32L d_model=4096 32H (kv=8) d_ff=14336 vocab=65536,
+MoE 16e top-2, Mamba+attn 1:7 interleave.  Structure: 4 blocks of 8 layers
+(attention at offset 4), MoE every 2nd layer.  DEVIATION (DESIGN.md §5):
+mamba sublayers use our Mamba-2/SSD block (d_state=16 as Jamba, head_dim
+64) rather than Mamba-1's selective scan — SSD is the TPU-native (matmul)
+formulation of the same state-space family.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b", family="hybrid",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab_size=65536,
+        hybrid_pattern="MMMMAMMM",
+        moe=MoEConfig(n_routed=16, n_shared=0, top_k=2, d_expert=14336,
+                      first_k_dense=0, every=2),
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64,
+                      chunk=256),
+        rope_theta=10000.0, norm="rmsnorm", act="silu",
+        source="arXiv:2403.19887 + hf:ai21labs/Jamba-v0.1 (SSD deviation)",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="jamba-v0.1-smoke", family="hybrid",
+        n_layers=8, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=512,
+        hybrid_pattern="MMMMAMMM",
+        moe=MoEConfig(n_routed=4, n_shared=0, top_k=2, d_expert=128,
+                      first_k_dense=0, every=2, capacity_factor=2.0),
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=32,
+                      chunk=16),
+        rope_theta=10000.0, norm="rmsnorm", act="silu",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

@@ -1,0 +1,37 @@
+"""Mamba-2 370M [arXiv:2405.21060].
+
+Assignment spec: 48L d_model=1024 (attention-free) vocab=50280,
+ssm_state=128, SSD.  Mamba-2 defaults: expand=2 (d_inner=2048),
+head_dim=64 (32 SSD heads), d_conv=4, chunk=256.  Attention-free, so all
+decode shapes including long_500k run — decode is O(1)-state.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m", family="ssm",
+        n_layers=48, d_model=1024, n_heads=32, n_kv_heads=32,
+        d_ff=0, vocab_size=50280,
+        attention="none",
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                      chunk=256),
+        norm="rmsnorm", act="silu", tie_embeddings=True,
+        source="arXiv:2405.21060 (SSD defaults)",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="mamba2-370m-smoke", family="ssm",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab_size=512,
+        attention="none",
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=32,
+                      chunk=16),
+        norm="rmsnorm", act="silu", tie_embeddings=True,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

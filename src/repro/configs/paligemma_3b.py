@@ -1,0 +1,36 @@
+"""PaLiGemma 3B [arXiv:2407.07726; hf].
+
+Assignment spec: 18L d_model=2048 8H (kv=1) d_ff=16384 vocab=257216,
+SigLIP + gemma.  The SigLIP vision tower is a STUB: ``input_specs()``
+supplies 256 precomputed patch embeddings [B, 256, d_model] which the
+model prepends as a bidirectionally-visible prefix (prefix-LM masking, as
+PaLI).  Gemma-2b fill-ins: head_dim=256, gated-GELU, tied embeddings.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b", family="vlm",
+        n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+        d_ff=16384, vocab_size=257216,
+        num_image_tokens=256,
+        rope_theta=10000.0, norm="rmsnorm", act="geglu",
+        tie_embeddings=True,
+        source="arXiv:2407.07726 + hf:google/paligemma-3b-pt-224",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="paligemma-3b-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=512,
+        num_image_tokens=8,
+        rope_theta=10000.0, norm="rmsnorm", act="geglu",
+        tie_embeddings=True,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

@@ -1,0 +1,30 @@
+"""StarCoder2 7B [arXiv:2402.19173; hf].
+
+Assignment spec: 32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152,
+GQA + RoPE.  head_dim = 4608/36 = 128.  StarCoder2 uses non-gated
+GELU MLP + LayerNorm.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b", family="dense",
+        n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+        d_ff=18432, vocab_size=49152,
+        rope_theta=100000.0, norm="layernorm", act="gelu",
+        source="arXiv:2402.19173 + hf:bigcode/starcoder2-7b",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="starcoder2-7b-smoke", family="dense",
+        n_layers=3, d_model=72, n_heads=6, n_kv_heads=2,
+        d_ff=128, vocab_size=512,
+        rope_theta=100000.0, norm="layernorm", act="gelu",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

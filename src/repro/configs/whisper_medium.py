@@ -1,0 +1,37 @@
+"""Whisper medium [arXiv:2212.04356].
+
+Assignment spec: 24L d_model=1024 16H (kv=16) d_ff=4096 vocab=51865,
+enc-dec, conv frontend STUB.  Real whisper-medium is 24 encoder + 24
+decoder layers; ``input_specs()`` supplies precomputed frame embeddings
+(batch, seq/2, d_model) and the decoder sees seq/2 tokens so total
+positions per cell = seq_len (DESIGN.md §5).  RoPE replaces whisper's
+learned/sinusoidal positions (shape-independence; documented deviation).
+Shapes beyond whisper's trained 1.5k/448 positions are architectural
+stress configs.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium", family="encdec",
+        n_layers=24, encoder_layers=24,
+        d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab_size=51865,
+        rope_theta=10000.0, norm="layernorm", act="gelu",
+        source="arXiv:2212.04356 (24+24 layers; RoPE deviation)",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    import jax.numpy as jnp
+
+    return ModelConfig(
+        name="whisper-medium-smoke", family="encdec",
+        n_layers=2, encoder_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=512,
+        rope_theta=10000.0, norm="layernorm", act="gelu",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

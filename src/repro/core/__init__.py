@@ -1,0 +1,4 @@
+from . import autograd, data, distributed, memory, nn, optim, tensor
+
+__all__ = ["autograd", "data", "distributed", "memory", "nn", "optim",
+           "tensor"]

@@ -1,0 +1,10 @@
+from .dataset import (BatchDataset, ConcatDataset, Dataset, MapDataset,
+                      PrefetchDataset, ShardDataset, ShuffleDataset,
+                      TensorDataset)
+from .lm import (ByteTokenizer, PackedLMDataset, SyntheticTokenDataset,
+                 synthetic_corpus)
+
+__all__ = ["BatchDataset", "ConcatDataset", "Dataset", "MapDataset",
+           "PrefetchDataset", "ShardDataset", "ShuffleDataset",
+           "TensorDataset", "ByteTokenizer", "PackedLMDataset",
+           "SyntheticTokenDataset", "synthetic_corpus"]

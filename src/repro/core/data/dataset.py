@@ -1,0 +1,171 @@
+"""DATASET abstractions (paper §4.2): a sample is a tensor or vector of
+tensors; datasets compose trivially into transform/resample/parallelize
+pipelines.
+"""
+
+from __future__ import annotations
+
+import abc
+import queue
+import threading
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+class Dataset(abc.ABC):
+    @abc.abstractmethod
+    def __len__(self) -> int: ...
+
+    @abc.abstractmethod
+    def __getitem__(self, idx: int) -> Any: ...
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self[i]
+
+
+class TensorDataset(Dataset):
+    """Wraps a list of equal-length arrays; sample i is a tuple of rows."""
+
+    def __init__(self, tensors: Sequence[np.ndarray]):
+        self.tensors = [np.asarray(t) for t in tensors]
+        n = len(self.tensors[0])
+        assert all(len(t) == n for t in self.tensors)
+
+    def __len__(self):
+        return len(self.tensors[0])
+
+    def __getitem__(self, idx):
+        return tuple(t[idx] for t in self.tensors)
+
+
+class BatchDataset(Dataset):
+    """Paper Listing 7: batches an underlying dataset."""
+
+    def __init__(self, dataset: Dataset, batch_size: int,
+                 drop_last: bool = True):
+        self.dataset = dataset
+        self.batch_size = batch_size
+        self.drop_last = drop_last
+
+    def __len__(self):
+        n = len(self.dataset)
+        if self.drop_last:
+            return n // self.batch_size
+        return (n + self.batch_size - 1) // self.batch_size
+
+    def __getitem__(self, idx):
+        start = idx * self.batch_size
+        stop = min(start + self.batch_size, len(self.dataset))
+        samples = [self.dataset[i] for i in range(start, stop)]
+        first = samples[0]
+        if isinstance(first, tuple):
+            return tuple(np.stack([s[j] for s in samples])
+                         for j in range(len(first)))
+        return np.stack(samples)
+
+
+class MapDataset(Dataset):
+    def __init__(self, dataset: Dataset, fn: Callable):
+        self.dataset, self.fn = dataset, fn
+
+    def __len__(self):
+        return len(self.dataset)
+
+    def __getitem__(self, idx):
+        return self.fn(self.dataset[idx])
+
+
+class ShuffleDataset(Dataset):
+    """Deterministic reshuffle per epoch via ``reshuffle(epoch)``."""
+
+    def __init__(self, dataset: Dataset, seed: int = 0):
+        self.dataset, self.seed = dataset, seed
+        self._perm = np.random.default_rng(seed).permutation(len(dataset))
+
+    def reshuffle(self, epoch: int) -> None:
+        self._perm = np.random.default_rng(
+            self.seed + epoch).permutation(len(self.dataset))
+
+    def __len__(self):
+        return len(self.dataset)
+
+    def __getitem__(self, idx):
+        return self.dataset[int(self._perm[idx])]
+
+
+class ConcatDataset(Dataset):
+    def __init__(self, datasets: Sequence[Dataset]):
+        self.datasets = list(datasets)
+        self._offsets = np.cumsum([0] + [len(d) for d in self.datasets])
+
+    def __len__(self):
+        return int(self._offsets[-1])
+
+    def __getitem__(self, idx):
+        d = int(np.searchsorted(self._offsets, idx, side="right") - 1)
+        return self.datasets[d][idx - int(self._offsets[d])]
+
+
+class ShardDataset(Dataset):
+    """Per-host sharding for data-parallel input pipelines."""
+
+    def __init__(self, dataset: Dataset, shard: int, num_shards: int):
+        assert 0 <= shard < num_shards
+        self.dataset, self.shard, self.num_shards = dataset, shard, num_shards
+
+    def __len__(self):
+        return len(self.dataset) // self.num_shards
+
+    def __getitem__(self, idx):
+        return self.dataset[idx * self.num_shards + self.shard]
+
+
+class PrefetchDataset(Dataset):
+    """Background-thread prefetch (paper: parallelize via native threads)."""
+
+    def __init__(self, dataset: Dataset, buffer_size: int = 4,
+                 num_threads: int = 2):
+        self.dataset = dataset
+        self.buffer_size = buffer_size
+        self.num_threads = num_threads
+
+    def __len__(self):
+        return len(self.dataset)
+
+    def __getitem__(self, idx):
+        return self.dataset[idx]
+
+    def __iter__(self):
+        n = len(self.dataset)
+        out_q: "queue.Queue[tuple[int, Any]]" = queue.Queue(self.buffer_size)
+        idx_q: "queue.Queue[int]" = queue.Queue()
+        for i in range(n):
+            idx_q.put(i)
+
+        def worker():
+            while True:
+                try:
+                    i = idx_q.get_nowait()
+                except queue.Empty:
+                    return
+                out_q.put((i, self.dataset[i]))
+
+        threads = [threading.Thread(target=worker, daemon=True)
+                   for _ in range(self.num_threads)]
+        for t in threads:
+            t.start()
+        pending: dict[int, Any] = {}
+        nxt = 0
+        got = 0
+        while got < n:
+            while nxt not in pending:
+                i, s = out_q.get()
+                pending[i] = s
+                got += 1
+                if got == n:
+                    break
+            while nxt in pending:
+                yield pending.pop(nxt)
+                nxt += 1

@@ -1,0 +1,10 @@
+from .interface import (DistributedInterface, EmulatedBackend,
+                        ShardMapBackend, Work, get_distributed,
+                        init_distributed)
+from .grad_sync import (GradientSynchronizer, GradSyncConfig, quantize_int8,
+                        dequantize_int8)
+
+__all__ = ["DistributedInterface", "EmulatedBackend", "ShardMapBackend",
+           "Work", "get_distributed", "init_distributed",
+           "GradientSynchronizer", "GradSyncConfig", "quantize_int8",
+           "dequantize_int8"]

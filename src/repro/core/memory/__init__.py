@@ -1,0 +1,6 @@
+from .manager import (Block, BumpMemoryManager, CachingMemoryManager,
+                      MemoryManagerAdapter, MemoryStats, OutOfMemory)
+from . import telemetry
+
+__all__ = ["Block", "BumpMemoryManager", "CachingMemoryManager",
+           "MemoryManagerAdapter", "MemoryStats", "OutOfMemory", "telemetry"]

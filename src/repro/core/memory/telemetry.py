@@ -1,0 +1,85 @@
+"""Allocation telemetry: record alloc/free traces from real model execution.
+
+Paper §5.2.2: researchers "built highly-specialized telemetry that tied
+individual tensor operations to specific allocations".  Here, the lazy
+tensor backend (and the tape autograd, if asked) emit events tagged with
+the producing op; traces are serializable and replayable against any
+:class:`MemoryManagerAdapter` policy for fragmentation studies.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass
+class TraceEvent:
+    kind: str          # "alloc" | "free"
+    uid: int           # logical buffer id
+    nbytes: int = 0
+    tag: str = ""      # producing tensor op
+
+
+@dataclass
+class AllocTrace:
+    events: list[TraceEvent] = field(default_factory=list)
+
+    def append(self, ev: TraceEvent) -> None:
+        self.events.append(ev)
+
+    def __len__(self):
+        return len(self.events)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump([asdict(e) for e in self.events], f)
+
+    @classmethod
+    def load(cls, path: str) -> "AllocTrace":
+        with open(path) as f:
+            return cls([TraceEvent(**e) for e in json.load(f)])
+
+    def replay(self, manager) -> None:
+        """Replay the trace against a memory-manager policy."""
+        ptrs: dict[int, int] = {}
+        for ev in self.events:
+            if ev.kind == "alloc":
+                ptrs[ev.uid] = manager.alloc(ev.nbytes)
+            elif ev.kind == "free" and ev.uid in ptrs:
+                manager.unlock(ptrs.pop(ev.uid))
+        for ptr in ptrs.values():
+            manager.unlock(ptr)
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.trace: AllocTrace | None = None
+        self.live: dict[int, int] = {}
+
+
+_STATE = _State()
+
+
+def start_recording() -> AllocTrace:
+    _STATE.trace = AllocTrace()
+    _STATE.live = {}
+    return _STATE.trace
+
+
+def stop_recording() -> AllocTrace | None:
+    t = _STATE.trace
+    _STATE.trace = None
+    return t
+
+
+def record_alloc(uid: int, nbytes: int, tag: str = "") -> None:
+    if _STATE.trace is not None:
+        _STATE.trace.append(TraceEvent("alloc", uid, nbytes, tag))
+        _STATE.live[uid] = nbytes
+
+
+def record_free(uid: int) -> None:
+    if _STATE.trace is not None and uid in _STATE.live:
+        _STATE.trace.append(TraceEvent("free", uid, _STATE.live.pop(uid)))

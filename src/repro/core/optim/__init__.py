@@ -1,0 +1,5 @@
+from .optimizer import (Optimizer, SGD, SGDOptimizer, Adam, AdamW, Adafactor,
+                        clip_by_global_norm, cosine_schedule, linear_schedule)
+
+__all__ = ["Optimizer", "SGD", "SGDOptimizer", "Adam", "AdamW", "Adafactor",
+           "clip_by_global_norm", "cosine_schedule", "linear_schedule"]

@@ -1,0 +1,11 @@
+from .backend import TensorBackend
+from .dispatch import (available_backends, current_backend, get_backend,
+                       register_backend, set_backend, use_backend)
+from .jnp_backend import JnpBackend
+from . import ops
+
+__all__ = [
+    "TensorBackend", "JnpBackend", "ops",
+    "available_backends", "current_backend", "get_backend",
+    "register_backend", "set_backend", "use_backend",
+]

@@ -1,0 +1,92 @@
+"""Backend registry + dispatch: the single source of truth for tensor ops.
+
+Paper §5.2.4: "an implementer can simply subclass or swap out the existing
+implementation of the add function ... All add operations in Flashlight
+dispatch to that operator, so existing baselines and operations will run
+with the new implementation without any additional code changes."
+
+``use_backend`` swaps the active backend for a scope; everything layered on
+:mod:`repro.core.tensor.ops` — the core NN stack *and* the production model
+zoo — picks up the swap with zero call-site changes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable
+
+from .backend import TensorBackend
+from .jnp_backend import JnpBackend
+
+_REGISTRY: dict[str, Callable[[], TensorBackend]] = {}
+_INSTANCES: dict[str, TensorBackend] = {}
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.backend: TensorBackend | None = None
+
+
+_STATE = _State()
+
+
+def register_backend(name: str, factory: Callable[[], TensorBackend]) -> None:
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str) -> TensorBackend:
+    if name not in _INSTANCES:
+        if name not in _REGISTRY:
+            raise KeyError(
+                f"unknown tensor backend {name!r}; available: {available_backends()}")
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def current_backend() -> TensorBackend:
+    if _STATE.backend is None:
+        _STATE.backend = get_backend("jnp")
+    return _STATE.backend
+
+
+def set_backend(backend: TensorBackend | str) -> None:
+    if isinstance(backend, str):
+        backend = get_backend(backend)
+    _STATE.backend = backend
+
+
+@contextlib.contextmanager
+def use_backend(backend: TensorBackend | str):
+    """Scoped backend swap — the paper's headline customization point."""
+    prev = _STATE.backend
+    set_backend(backend)
+    try:
+        yield current_backend()
+    finally:
+        _STATE.backend = prev
+
+
+register_backend("jnp", JnpBackend)
+
+
+def _register_builtin_lazily():
+    # Imported on demand to keep `import repro.core.tensor` light; both
+    # modules self-register when imported directly as well.
+    def _lazy():
+        from .lazy_backend import LazyBackend
+        return LazyBackend()
+
+    def _pallas():
+        from .pallas_backend import PallasBackend
+        return PallasBackend()
+
+    register_backend("lazy", _lazy)
+    register_backend("pallas", _pallas)
+
+
+_register_builtin_lazily()

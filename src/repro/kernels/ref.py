@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    return jnp.matmul(x, y)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    ms = (x32 * x32).mean(-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps)
+            * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, softcap: float = 0.0):
+    """q,k,v: [B, H, S, D] (kv heads already expanded to H)."""
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)
+
+
+def flash_decode(q, k, v, valid, *, scale: float | None = None):
+    """q: [BH, D]; k,v: [BH, S, D]; valid: [S] bool -> [BH, D]."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    scores = jnp.einsum("nd,nsd->ns", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(valid[None, :], w, 0.0)
+    return jnp.einsum("ns,nsd->nd", w.astype(v.dtype), v)
+
+
+def ssd_chunk(x, dt, A, B, C):
+    """Intra-chunk SSD + end-of-chunk states (single chunk, no carry-in).
+
+    x: [B,H,NC,Q,P]; dt: [B,H,NC,Q]; A: [H]; B,C: [B,NC,Q,N].
+    Returns y_diag [B,H,NC,Q,P], states [B,H,NC,P,N].
+    """
+    a = dt * A[None, :, None, None]                          # [B,H,NC,Q]
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(tri, jnp.exp(seg), 0.0)                    # [B,H,NC,Q,Q]
+    scores = jnp.einsum("bcqn,bcsn->bcqs", C, B)
+    y = jnp.einsum("bcqs,bhcqs,bhcs,bhcsp->bhcqp",
+                   scores, L, dt, x)
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)                # [B,H,NC,Q]
+    states = jnp.einsum("bcqn,bhcq,bhcq,bhcqp->bhcpn",
+                        B, decay_to_end, dt, x)
+    return y.astype(x.dtype), states.astype(jnp.float32)
+
+
+def moe_gmm(h, w):
+    """Grouped (per-expert) matmul: [E,C,D] @ [E,D,F] -> [E,C,F]."""
+    return jnp.einsum("ecd,edf->ecf", h, w)

@@ -1,0 +1,50 @@
+"""Fused RMSNorm Pallas kernel.
+
+Memory-bound op: unfused XLA does (read x, write ms) + (read x, read ms,
+write out) — the fused kernel reads x once per (bn, D) VMEM tile, reduces
+in fp32 registers, scales, and writes once: ~2·N·D bytes of HBM traffic
+vs ~4·N·D.  Weight is staged once per program via a constant index map.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = (x * x).mean(-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (x * inv * w_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bn", "interpret"))
+def rms_norm(x, weight, *, eps: float = 1e-6, bn: int = 256,
+             interpret: bool = False):
+    """x: [..., D]; weight: [D]."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    n = 1
+    for s in orig_shape[:-1]:
+        n *= s
+    x2 = x.reshape(n, d)
+    bn = min(bn, n)
+    while n % bn != 0:
+        bn -= 1
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x2, weight)
+    return out.reshape(orig_shape)

@@ -1,0 +1,90 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+The TPU-native form of the selective scan (DESIGN.md §6): instead of a
+length-S sequential recurrence (hostile to the MXU), each (batch, head,
+chunk) program computes
+
+  y_diag  = (C·Bᵀ ∘ L ∘ dt) · x      — a masked attention-like matmul
+  states  = Bᵀ · (decay·dt·x)         — the chunk's contribution to h
+
+entirely in VMEM, with the decay matrix L = exp(segsum(dt·A)) built from
+an in-register cumulative sum.  The O(n_chunks) inter-chunk recurrence —
+tiny: [B,H,P,N] per chunk — stays in XLA (lax.scan), so the kernel covers
+the FLOP-dominant part.  VMEM per program at (Q=256, P=64, N=128):
+Q·P + 2·Q·N + Q·Q + Q·P + P·N ≈ 700 KiB fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0 ** 30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, *,
+                q: int):
+    x = x_ref[0, 0, 0]                              # [Q, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)        # [Q]
+    a = a_ref[0, 0, 0].astype(jnp.float32)          # [Q] (= dt * A, <= 0)
+    bmat = b_ref[0, 0].astype(jnp.float32)          # [Q, N]
+    cmat = c_ref[0, 0].astype(jnp.float32)          # [Q, N]
+
+    cs = jnp.cumsum(a)                              # [Q]
+    seg = cs[:, None] - cs[None, :]                 # [Q, Q]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(qi >= ki, jnp.exp(seg), 0.0)      # [Q, Q] decay mask
+
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [Q, Q]
+    w = scores * L * dt[None, :]
+    y = jax.lax.dot_general(
+        w, x.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [Q, P]
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cs[-1] - cs)              # [Q]
+    xw = x.astype(jnp.float32) * (decay_to_end * dt)[:, None]  # [Q, P]
+    st = jax.lax.dot_general(
+        xw, bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [P, N]
+    st_ref[0, 0, 0] = st
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, A, B, C, *, interpret: bool = False):
+    """Intra-chunk SSD (matches kernels/ref.py::ssd_chunk).
+
+    x: [B,H,NC,Q,P]; dt: [B,H,NC,Q]; A: [H]; B,C: [B,NC,Q,N].
+    Returns (y_diag [B,H,NC,Q,P], states [B,H,NC,P,N]).
+    """
+    b, h, nc, q, p = x.shape
+    n = B.shape[-1]
+    a = dt * A[None, :, None, None]
+    grid = (b, h, nc)
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j, c: (i, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda i, j, c: (i, j, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, q, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, nc, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, B, C)
+    return y, st

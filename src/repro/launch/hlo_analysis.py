@@ -1,0 +1,201 @@
+"""Loop-aware analysis of post-SPMD HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``lax.scan`` body
+*once* — for a 61-layer scanned model it under-reports FLOPs and
+collective traffic by ~the layer count.  The partitioned HLO, however,
+records ``backend_config={"known_trip_count":{"n":...}}`` on every while
+op, so exact totals are recoverable:
+
+  1. split the module into computations,
+  2. per computation: matmul FLOPs from every ``dot`` (2·|out|·|contract|)
+     and wire bytes from every collective,
+  3. propagate call-graph multipliers (while bodies × trip count,
+     fusions/calls × 1) from the entry computation,
+  4. totals = Σ per-computation value × multiplier.
+
+Everything here is per-device (post-SPMD shapes are local shards).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_SINGLE_RE = re.compile(
+    r"(?:body|condition|calls|to_apply)=%([\w\.\-]+)")
+_CALLEE_LIST_RE = re.compile(
+    r"(?:calls|branch_computations)=\{([^}]*)\}")
+
+
+def _callees(rhs: str) -> list[str]:
+    out = [m.group(1) for m in _CALLEE_SINGLE_RE.finditer(rhs)]
+    for m in _CALLEE_LIST_RE.finditer(rhs):
+        for item in m.group(1).split(","):
+            item = item.strip().lstrip("%")
+            if item:
+                out.append(item)
+    return out
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shapes_of(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shapes_of(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Comp:
+    name: str
+    dot_flops: int = 0
+    coll_bytes: dict = field(default_factory=lambda: defaultdict(int))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(int))
+    calls: list = field(default_factory=list)   # (callee, multiplier)
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    defs: dict[str, int] = {}          # instruction -> result bytes
+    shapes: dict[str, list] = {}       # instruction -> first result shape
+    entry: str | None = None
+
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and line.rstrip().endswith("{"):
+            cur = _Comp(hdr.group(1))
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            defs, shapes = {}, {}
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        first_paren = rhs.find("(")
+        type_str = rhs[:first_paren] if first_paren > 0 else rhs
+        defs[name] = _bytes_of(type_str)
+        sh = _shapes_of(type_str)
+        shapes[name] = sh[0][1] if sh else []
+
+        opcode_m = re.search(r"\}?\s*([\w\-]+)\(", rhs)
+        opcode = opcode_m.group(1) if opcode_m else ""
+
+        if opcode == "dot":
+            cm = _CONTRACT_RE.search(rhs)
+            contract = 1
+            if cm:
+                args = rhs[rhs.find("(") + 1: rhs.find(")")]
+                first_op = args.split(",")[0].strip().split(" ")[-1] \
+                    .lstrip("%")
+                lhs_shape = shapes.get(first_op, [])
+                for idx in (int(i) for i in cm.group(1).split(",") if i):
+                    if idx < len(lhs_shape):
+                        contract *= lhs_shape[idx]
+            out_elems = 1
+            for d in shapes[name]:
+                out_elems *= d
+            cur.dot_flops += 2 * out_elems * contract
+        elif opcode in _COLLECTIVES:
+            payload = defs[name]
+            if opcode == "all-reduce":
+                payload *= 2          # ring: reduce-scatter + all-gather
+            elif opcode == "reduce-scatter":
+                args = rhs[rhs.find("(") + 1: rhs.find(")")]
+                ob = 0
+                for a in args.split(","):
+                    ob += defs.get(a.strip().split(" ")[-1].lstrip("%"), 0)
+                payload = ob or payload
+            cur.coll_bytes[opcode] += payload
+            cur.coll_counts[opcode] += 1
+
+        # call-graph edges
+        if opcode == "while":
+            tm = _TRIP_RE.search(rhs)
+            trip = int(tm.group(1)) if tm else 1
+            for callee in _callees(rhs):
+                cur.calls.append((callee, trip))
+        elif ("calls=" in rhs or "to_apply=" in rhs
+              or "branch_computations=" in rhs):
+            for callee in _callees(rhs):
+                cur.calls.append((callee, 1))
+
+    # propagate multipliers from the entry (fixpoint over the call DAG)
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    if entry is None and comps:
+        referenced = {callee for c in comps.values() for callee, _ in c.calls}
+        roots = [c for c in comps if c not in referenced] or list(comps)
+        for r in roots:
+            mult[r] = 1.0
+    else:
+        mult[entry] = 1.0
+    for _ in range(len(comps) + 2):
+        changed = False
+        new = {c: (1.0 if c == entry else 0.0) for c in comps}
+        if entry is None:
+            for c in comps:
+                if mult[c] and not any(
+                        c == callee for cc in comps.values()
+                        for callee, _ in cc.calls):
+                    new[c] = 1.0
+        for cname, comp in comps.items():
+            for callee, k in comp.calls:
+                if callee in new:
+                    new[callee] += mult[cname] * k
+        if new != mult:
+            mult = new
+            changed = True
+        if not changed:
+            break
+
+    flops = 0
+    coll = defaultdict(int)
+    counts = defaultdict(int)
+    n_while = 0
+    for cname, comp in comps.items():
+        m = max(mult.get(cname, 0.0), 0.0)
+        flops += comp.dot_flops * m
+        for k, v in comp.coll_bytes.items():
+            coll[k] += v * m
+        for k, v in comp.coll_counts.items():
+            counts[k] += v * m
+        n_while += sum(1 for _, t in comp.calls if t > 1)
+
+    return {
+        "dot_flops": int(flops),
+        "collective_bytes": {k: int(coll.get(k, 0)) for k in _COLLECTIVES},
+        "collective_total_bytes": int(sum(coll.values())),
+        "collective_counts": {k: int(counts.get(k, 0))
+                              for k in _COLLECTIVES},
+        "n_computations": len(comps),
+        "n_loops": n_while,
+    }

@@ -1,0 +1,262 @@
+"""Cell planning: (architecture × input shape × mesh × variant) → jit-able
+step function with input/output shardings and ShapeDtypeStruct stand-ins.
+
+This is the shared machinery for the multi-pod dry-run, the trainer, and
+the serving engine.  A *variant* bundles the perf knobs hill-climbed in
+EXPERIMENTS.md §Perf:
+
+  sharding:   baseline (TP, replicated params over data) | fsdp
+  decode:     gspmd (naive; GSPMD gathers the cache)     | flash (SP flash-decoding)
+  remat:      none | dots | full
+  attention:  ref | blockwise | pallas
+  ce:         dense | chunked
+  opt_dtype:  f32 | bf16 optimizer moments
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.optim import AdamW
+from repro.models import build_model
+from repro.models.meta import tree_structs
+from repro.serving.decode_attention import make_flash_decode_attend
+from repro.sharding.rules import ShardingRules, make_rules
+
+
+@dataclass
+class Variant:
+    name: str = "baseline"
+    sharding: str = "baseline"       # baseline | fsdp
+    decode: str = "flash"            # gspmd | flash
+    remat: str = "full"              # none | dots | full
+    attention: str = "ref"           # ref | blockwise | pallas
+    ce: str = "dense"                # dense | chunked
+    opt_dtype: str = "f32"           # f32 | bf16
+    cache: str = "compute"           # compute | fp8 quantized KV cache
+    scan_layers: bool = True
+    moe_impl: str = "scatter"
+
+    def apply_to(self, cfg: ModelConfig) -> ModelConfig:
+        return cfg.with_(remat=self.remat, attention_impl=self.attention,
+                         ce_impl=self.ce, scan_layers=self.scan_layers,
+                         moe_impl=self.moe_impl, cache_dtype=self.cache)
+
+
+BASELINE = Variant()
+
+
+class CellPlan:
+    """Everything needed to lower one (arch, shape, mesh, variant) cell."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                 variant: Variant = BASELINE):
+        self.variant = variant
+        self.cfg = variant.apply_to(cfg)
+        self.shape = shape
+        self.mesh = mesh
+        self.rules: ShardingRules = make_rules(variant.sharding)
+        self.model = build_model(self.cfg)
+        self.param_metas = self.model.abstract_params()
+        self.optimizer = AdamW(
+            lr=3e-4,
+            state_dtype=jnp.bfloat16 if variant.opt_dtype == "bf16" else None)
+
+    # -- shardings ------------------------------------------------------------
+    def param_shardings(self):
+        return self.rules.tree_shardings(self.param_metas, self.mesh)
+
+    def param_structs(self):
+        return tree_structs(self.param_metas)
+
+    def opt_structs(self, param_structs):
+        return jax.eval_shape(self.optimizer.init, param_structs)
+
+    def opt_shardings(self, param_shardings):
+        return jax.tree.map(self.optimizer.state_sharding_like,
+                            param_shardings,
+                            is_leaf=lambda x: isinstance(x, NamedSharding))
+
+    def _spec(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.rules.spec(shape, axes,
+                                                        self.mesh))
+
+    def _replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # -- batch structs/shardings ------------------------------------------------
+    def train_batch(self):
+        cfg, s = self.cfg, self.shape
+        b, sl = s.global_batch, s.seq_len
+        tok = jax.ShapeDtypeStruct((b, sl), jnp.int32)
+        structs: dict[str, Any] = {"tokens": tok, "labels": tok}
+        shards = {"tokens": self._spec((b, sl), ("batch", None)),
+                  "labels": self._spec((b, sl), ("batch", None))}
+        if cfg.family == "encdec":
+            half = sl // 2
+            structs = {
+                "frames": jax.ShapeDtypeStruct((b, half, cfg.d_model),
+                                               cfg.compute_dtype),
+                "tokens": jax.ShapeDtypeStruct((b, half), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, half), jnp.int32)}
+            shards = {
+                "frames": self._spec((b, half, cfg.d_model),
+                                     ("batch", None, None)),
+                "tokens": self._spec((b, half), ("batch", None)),
+                "labels": self._spec((b, half), ("batch", None))}
+        elif cfg.family == "vlm":
+            txt = sl - cfg.num_image_tokens
+            structs = {
+                "image_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.num_image_tokens, cfg.d_model),
+                    cfg.compute_dtype),
+                "tokens": jax.ShapeDtypeStruct((b, txt), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, txt), jnp.int32)}
+            shards = {
+                "image_embeds": self._spec(
+                    (b, cfg.num_image_tokens, cfg.d_model),
+                    ("batch", None, None)),
+                "tokens": self._spec((b, txt), ("batch", None)),
+                "labels": self._spec((b, txt), ("batch", None))}
+        return structs, shards
+
+    # -- step functions ------------------------------------------------------------
+    def make_train_step(self):
+        model, opt = self.model, self.optimizer
+
+        def train_step(params, opt_state, step, batch):
+            def loss_of(p):
+                return model.loss_fn(p, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params)
+            new_p, new_s = opt.apply_with_count(params, grads, opt_state,
+                                                3e-4, step)
+            metrics = dict(metrics, loss=loss)
+            return new_p, new_s, metrics
+
+        return train_step
+
+    def train_args(self):
+        """(structs, in_shardings, out_shardings, donate) for train_step."""
+        p_structs = self.param_structs()
+        p_shard = self.param_shardings()
+        o_structs = self.opt_structs(p_structs)
+        o_shard = self.opt_shardings(p_shard)
+        b_structs, b_shard = self.train_batch()
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        rep = self._replicated()
+        metrics_shard = None  # inferred (scalars)
+        in_sh = (p_shard, o_shard, rep, b_shard)
+        out_sh = (p_shard, o_shard, metrics_shard)
+        return ((p_structs, o_structs, step, b_structs), in_sh, out_sh)
+
+    # -- serving ----------------------------------------------------------------------
+    def _cache_metas(self):
+        cfg, s = self.cfg, self.shape
+        b = s.global_batch
+        if cfg.family == "encdec":
+            return self.model.cache_spec(b, s.seq_len // 2,
+                                         enc_len=s.seq_len // 2)
+        return self.model.cache_spec(b, s.seq_len)
+
+    def _decode_attend_fn(self):
+        if self.variant.decode != "flash":
+            return None
+        b = self.shape.global_batch
+        batch_axes = []
+        rem = b
+        for ax in ("pod", "data"):
+            if ax in self.mesh.axis_names and rem % self.mesh.shape[ax] == 0:
+                batch_axes.append(ax)
+                rem //= self.mesh.shape[ax]
+        seq_axes = [a for a in self.rules.mesh_axes_for("seq_shard")
+                    if a in self.mesh.axis_names
+                    and self.shape.seq_len % self.mesh.shape[a] == 0]
+        if not seq_axes:
+            return None
+        return make_flash_decode_attend(self.mesh, seq_axes=seq_axes,
+                                        batch_axes=batch_axes)
+
+    def make_serve_step(self):
+        model = self.model
+        attend_fn = self._decode_attend_fn()
+
+        def serve_step(params, cache, token, pos):
+            logits, new_cache = model.decode_step(params, cache, token, pos,
+                                                  attend_fn=attend_fn)
+            next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_token[:, None], new_cache
+
+        return serve_step
+
+    def serve_args(self):
+        cfg, s = self.cfg, self.shape
+        b = s.global_batch
+        p_structs = self.param_structs()
+        p_shard = self.param_shardings()
+        cache_metas = self._cache_metas()
+        c_structs = tree_structs(cache_metas)
+        c_shard = self.rules.tree_shardings(cache_metas, self.mesh)
+        token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_shard = self._spec((b, 1), ("batch", None))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        rep = self._replicated()
+        in_sh = (p_shard, c_shard, tok_shard, rep)
+        out_sh = (tok_shard, c_shard)
+        return ((p_structs, c_structs, token, pos), in_sh, out_sh)
+
+    def make_prefill_step(self):
+        model = self.model
+        cfg, s = self.cfg, self.shape
+
+        if cfg.family == "encdec":
+            def prefill_step(params, frames, tokens):
+                return model.prefill(params, frames, tokens,
+                                     max_seq=s.seq_len // 2)
+        else:
+            def prefill_step(params, tokens):
+                return model.prefill(params, tokens, max_seq=s.seq_len)
+
+        return prefill_step
+
+    def prefill_args(self):
+        cfg, s = self.cfg, self.shape
+        b = s.global_batch
+        p_structs = self.param_structs()
+        p_shard = self.param_shardings()
+        cache_metas = self._cache_metas()
+        c_shard = self.rules.tree_shardings(cache_metas, self.mesh)
+        logits_shard = None
+        if cfg.family == "encdec":
+            half = s.seq_len // 2
+            frames = jax.ShapeDtypeStruct((b, half, cfg.d_model),
+                                          cfg.compute_dtype)
+            tokens = jax.ShapeDtypeStruct((b, half), jnp.int32)
+            in_sh = (p_shard,
+                     self._spec((b, half, cfg.d_model), ("batch", None, None)),
+                     self._spec((b, half), ("batch", None)))
+            return ((p_structs, frames, tokens), in_sh,
+                    (logits_shard, c_shard))
+        tokens = jax.ShapeDtypeStruct((b, s.seq_len), jnp.int32)
+        in_sh = (p_shard, self._spec((b, s.seq_len), ("batch", None)))
+        return ((p_structs, tokens), in_sh, (logits_shard, c_shard))
+
+    # -- unified entry --------------------------------------------------------------
+    def lowerable(self):
+        """Returns (fn, args_structs, in_shardings, out_shardings, donate)."""
+        kind = self.shape.kind
+        if kind == "train":
+            args, in_sh, out_sh = self.train_args()
+            return self.make_train_step(), args, in_sh, out_sh, (0, 1)
+        if kind == "decode":
+            args, in_sh, out_sh = self.serve_args()
+            return self.make_serve_step(), args, in_sh, out_sh, (1,)
+        args, in_sh, out_sh = self.prefill_args()
+        return self.make_prefill_step(), args, in_sh, out_sh, ()

@@ -1,0 +1,16 @@
+from .meta import (ParamMeta, is_meta, stack_tree, stacked, tree_axes,
+                   tree_init, tree_nbytes, tree_params_count, tree_structs)
+from .transformer import LM, cross_entropy_loss
+from .encdec import EncDecLM
+
+
+def build_model(cfg):
+    """Factory: ModelConfig -> model facade."""
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return LM(cfg)
+
+
+__all__ = ["ParamMeta", "is_meta", "stack_tree", "stacked", "tree_axes",
+           "tree_init", "tree_nbytes", "tree_params_count", "tree_structs",
+           "LM", "EncDecLM", "build_model", "cross_entropy_loss"]

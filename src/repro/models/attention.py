@@ -1,0 +1,432 @@
+"""Attention variants: GQA/MQA/MHA (+ sliding window, softcap), and
+DeepSeek MLA (multi-head latent attention) with matrix-absorbed decode.
+
+Full-sequence paths (train/prefill) support ``attention_impl="pallas"``
+(flash-attention kernel) or ``"ref"`` (masked-softmax oracle, also the
+dry-run lowering path).  Decode paths produce *partial* (m, l, o) softmax
+statistics so the serving layer can combine across sequence-sharded KV
+caches (flash-decoding; see repro/serving/decode_attention.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, linear, softcap
+from .meta import ParamMeta
+
+NEG_INF = -2.0 ** 30  # finite: keeps fully-masked rows NaN-free
+
+
+# ===========================================================================
+# masks
+# ===========================================================================
+
+def make_mask(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool = True,
+              window: int = 0, prefix_len: int = 0) -> jax.Array:
+    """[Sq, Sk] boolean mask. window>0 = sliding window; prefix positions
+    (< prefix_len) are bidirectionally visible (PaLI-style prefix-LM)."""
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    m = (q >= k) if causal else jnp.ones((q_pos.shape[0], kv_pos.shape[0]),
+                                         bool)
+    if window > 0:
+        m = m & (q - k < window)
+    if prefix_len > 0:
+        m = m | (k < prefix_len)
+    return m
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+
+def gqa_meta(cfg) -> dict[str, ParamMeta]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.param_dtype
+    return {
+        "wq": ParamMeta((d, h * hd), ("embed", "heads"), dt, "fan_in"),
+        "wk": ParamMeta((d, kv * hd), ("embed", "kv_heads"), dt, "fan_in"),
+        "wv": ParamMeta((d, kv * hd), ("embed", "kv_heads"), dt, "fan_in"),
+        "wo": ParamMeta((h * hd, d), ("heads", "embed"), dt, "fan_in"),
+    }
+
+
+def _qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(x, p["wq"]).reshape(b, s, h, hd)
+    k = linear(x, p["wk"]).reshape(b, s, kv, hd)
+    v = linear(x, p["wv"]).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_ref(q, k, v, mask, scale, cap: float = 0.0):
+    """Reference grouped attention. q:[B,S,H,D] k/v:[B,S,Kv,D]."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, sq, kvh, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    return out.reshape(b, sq, h, v.shape[-1])  # dv may differ from dk (MLA)
+
+
+def _sdpa_blockwise(q, k, v, positions, *, causal, window, prefix_len,
+                    scale, cap: float = 0.0, q_chunk: int = 1024):
+    """Query-chunked attention: never materializes the [S, S] score matrix.
+
+    Peak scores buffer is [B, Kv, G, q_chunk, S] instead of O(S²) — the
+    memory-term optimization for long-sequence prefill (§Perf).  Exact
+    (full softmax row per chunk; the key axis is never split).
+    """
+    b, s, h, d = q.shape
+    while s % q_chunk != 0:
+        q_chunk //= 2
+    n = s // q_chunk
+    qc = q.reshape(b, n, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = positions.reshape(n, q_chunk)
+
+    def one_chunk(args):
+        qi, pi = args
+        mask = make_mask(pi, positions, causal=causal, window=window,
+                         prefix_len=prefix_len)
+        return _sdpa_ref(qi, k, v, mask, scale, cap)
+
+    out = jax.lax.map(one_chunk, (qc, pc))            # [n, B, qc, H, Dv]
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, v.shape[-1])
+
+
+def gqa_attention(p, x, cfg, *, positions, window: int = 0,
+                  prefix_len: int = 0, causal: bool = True) -> jax.Array:
+    """Full-sequence attention (train/prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    if cfg.attention_impl == "pallas" and jax.default_backend() == "tpu":
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale, softcap=cfg.logit_softcap)
+    elif cfg.attention_impl == "blockwise":
+        out = _sdpa_blockwise(q, k, v, positions, causal=causal,
+                              window=window, prefix_len=prefix_len,
+                              scale=scale, cap=cfg.logit_softcap)
+    else:
+        mask = make_mask(positions, positions, causal=causal, window=window,
+                         prefix_len=prefix_len)
+        out = _sdpa_ref(q, k, v, mask, scale, cfg.logit_softcap)
+    return linear(out.reshape(b, s, -1), p["wo"])
+
+
+def gqa_cache_spec(cfg, batch: int, max_seq: int, window: int = 0):
+    """Cache metas for one layer. Window layers get ring buffers."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    s = min(window, max_seq) if window > 0 else max_seq
+    seq_ax = None if window > 0 else "seq_shard"
+    dt = cfg.resolved_cache_dtype
+    return {
+        "k": ParamMeta((batch, s, kv, hd),
+                       ("batch", seq_ax, "kv_heads", None), dt, "zeros"),
+        "v": ParamMeta((batch, s, kv, hd),
+                       ("batch", seq_ax, "kv_heads", None), dt, "zeros"),
+    }
+
+
+def gqa_prefill(p, x, cfg, *, positions, window: int = 0, max_seq: int,
+                prefix_len: int = 0):
+    """Full-seq attention + build the decode cache."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    mask = make_mask(positions, positions, window=window,
+                     prefix_len=prefix_len)
+    out = _sdpa_ref(q, k, v, mask, scale, cfg.logit_softcap)
+    out = linear(out.reshape(b, s, -1), p["wo"])
+    cache = _write_prefill_cache(k, v, cfg, window, max_seq)
+    return out, cache
+
+
+def _write_prefill_cache(k, v, cfg, window, max_seq):
+    k = k.astype(cfg.resolved_cache_dtype)
+    v = v.astype(cfg.resolved_cache_dtype)
+    b, s = k.shape[:2]
+    if window > 0:
+        w = min(window, max_seq)
+        if s >= w:
+            # ring-buffer layout: slot i holds position p with p % w == i,
+            # matching decode's `slot = pos % w` convention
+            shift = (s - w) % w
+            kw = jnp.roll(k[:, -w:], shift, axis=1)
+            vw = jnp.roll(v[:, -w:], shift, axis=1)
+        else:
+            kw = jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+            vw = jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        return {"k": kw, "v": vw}
+    pad = max_seq - s
+    return {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+
+
+def gqa_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
+    """One decode step. x: [B, 1, D]; pos: scalar current position.
+
+    ``attend_fn(q, k, v, valid)`` lets the serving layer substitute a
+    sequence-sharded flash-decoding implementation.
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    q = linear(x, p["wq"]).reshape(b, 1, h, hd)
+    k = linear(x, p["wk"]).reshape(b, 1, kv, hd)
+    v = linear(x, p["wv"]).reshape(b, 1, kv, hd)
+    q = apply_rope(q, pos_arr, cfg.rope_theta)[:, 0]          # [B, H, D]
+    k = apply_rope(k, pos_arr, cfg.rope_theta)
+    k = k.astype(cache["k"].dtype)                            # fp8 cache opt
+    v = v.astype(cache["v"].dtype)
+    s_cache = cache["k"].shape[1]
+    slot = jnp.mod(pos, s_cache) if window > 0 else pos
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    idx = jnp.arange(s_cache)
+    if window > 0:
+        valid = jnp.where(pos + 1 >= s_cache, jnp.ones_like(idx, bool),
+                          idx <= pos)
+    else:
+        valid = idx <= pos
+    scale = 1.0 / math.sqrt(hd)
+    attend = attend_fn or plain_cache_attention
+    out = attend(q, new_k, new_v, valid, scale=scale,
+                 cap=cfg.logit_softcap)
+    out = linear(out.reshape(b, 1, -1), p["wo"])
+    return out, {"k": new_k, "v": new_v}
+
+
+# ===========================================================================
+# cache attention core (shared by GQA decode and MLA absorbed decode)
+# ===========================================================================
+
+def partial_cache_attention(q, k, v, valid, *, scale, cap: float = 0.0):
+    """Partial softmax stats for flash-decoding combine.
+
+    q: [B, H, Dk]; k: [B, S, Kv, Dk]; v: [B, S, Kv, Dv]; valid: [S] bool.
+    Caches may be stored quantized (fp8) — math upcasts to q's dtype.
+    Returns m: [B, Kv, G], l: [B, Kv, G], o: [B, Kv, G, Dv].
+    """
+    b, h, dk = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, dk)
+    k = k.astype(q.dtype)
+    v = v.astype(q.dtype)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                                 # [B,Kv,G]
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(valid[None, None, None, :], e, 0.0)
+    l = jnp.sum(e, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", e.astype(v.dtype), v).astype(
+        jnp.float32)
+    return m, l, o
+
+
+def plain_cache_attention(q, k, v, valid, *, scale, cap: float = 0.0):
+    """Unsharded decode attention; returns [B, H, Dv] in q's dtype."""
+    m, l, o = partial_cache_attention(q, k, v, valid, scale=scale, cap=cap)
+    b, kvh, g, dv = o.shape
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, kvh * g, dv).astype(q.dtype)
+
+
+# ===========================================================================
+# MLA (DeepSeek multi-head latent attention)
+# ===========================================================================
+
+def mla_meta(cfg) -> dict[str, ParamMeta]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = cfg.param_dtype
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    out: dict[str, ParamMeta] = {}
+    if m.q_lora_rank:
+        out["wq_a"] = ParamMeta((d, m.q_lora_rank), ("embed", None), dt,
+                                "fan_in")
+        out["q_norm"] = ParamMeta((m.q_lora_rank,), (None,), dt, "ones")
+        out["wq_b"] = ParamMeta((m.q_lora_rank, h * qk), (None, "heads"), dt,
+                                "fan_in")
+    else:
+        out["wq"] = ParamMeta((d, h * qk), ("embed", "heads"), dt, "fan_in")
+    out["wkv_a"] = ParamMeta((d, m.kv_lora_rank + m.qk_rope_dim),
+                             ("embed", None), dt, "fan_in")
+    out["kv_norm"] = ParamMeta((m.kv_lora_rank,), (None,), dt, "ones")
+    out["wkv_b"] = ParamMeta((m.kv_lora_rank,
+                              h * (m.qk_nope_dim + m.v_head_dim)),
+                             (None, "heads"), dt, "fan_in")
+    out["wo"] = ParamMeta((h * m.v_head_dim, d), ("heads", "embed"), dt,
+                          "fan_in")
+    return out
+
+
+def _rms(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    return (x32 * jax.lax.rsqrt((x32 * x32).mean(-1, keepdims=True) + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    if m.q_lora_rank:
+        cq = _rms(linear(x, p["wq_a"]), p["q_norm"])
+        q = linear(cq, p["wq_b"]).reshape(b, s, h, qk)
+    else:
+        q = linear(x, p["wq"]).reshape(b, s, h, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p, x, cfg, positions):
+    m = cfg.mla
+    kv_a = linear(x, p["wkv_a"])
+    c_kv = _rms(kv_a[..., : m.kv_lora_rank], p["kv_norm"])  # [B,S,C]
+    k_rope = kv_a[..., m.kv_lora_rank:][:, :, None, :]       # [B,S,1,R]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(p, x, cfg, *, positions, causal: bool = True,
+                  **_ignored) -> jax.Array:
+    """Expanded (train/prefill) MLA: materialize per-head K/V."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_kv_latent(p, x, cfg, positions)
+    kv = linear(c_kv, p["wkv_b"]).reshape(b, s, h,
+                                          m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, m.qk_rope_dim))], -1)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    mask = make_mask(positions, positions, causal=causal)
+    out = _sdpa_ref(q, k, v, mask, scale)
+    return linear(out.reshape(b, s, -1), p["wo"])
+
+
+def mla_cache_spec(cfg, batch: int, max_seq: int, window: int = 0):
+    """MLA caches the *latent* (c_kv, k_rope) — the memory win of MLA."""
+    m = cfg.mla
+    dt = cfg.resolved_cache_dtype
+    return {
+        "c_kv": ParamMeta((batch, max_seq, m.kv_lora_rank),
+                          ("batch", "seq_shard", None), dt, "zeros"),
+        "k_rope": ParamMeta((batch, max_seq, m.qk_rope_dim),
+                            ("batch", "seq_shard", None), dt, "zeros"),
+    }
+
+
+def mla_prefill(p, x, cfg, *, positions, max_seq: int, window: int = 0,
+                prefix_len: int = 0):
+    out = mla_attention(p, x, cfg, positions=positions)
+    c_kv, k_rope = _mla_kv_latent(p, x, cfg, positions)
+    c_kv = c_kv.astype(cfg.resolved_cache_dtype)
+    k_rope = k_rope.astype(cfg.resolved_cache_dtype)
+    s = x.shape[1]
+    pad = max_seq - s
+    cache = {"c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+             "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))}
+    return out, cache
+
+
+def mla_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
+    """Absorbed-matmul decode on the latent cache (DeepSeek-V2 appendix).
+
+    Per head: score = q_nopeᵀ·W_uk·c + q_ropeᵀ·k_rope, so W_uk is folded
+    into q once per step and attention runs in the compressed space — the
+    cache is (kv_lora + rope) wide instead of heads×(nope+v).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, pos_arr)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]              # [B,H,*]
+    c_kv_new, k_rope_new = _mla_kv_latent(p, x, cfg, pos_arr)
+    c_kv_new = c_kv_new.astype(cache["c_kv"].dtype)
+    k_rope_new = k_rope_new.astype(cache["k_rope"].dtype)
+    new_c = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
+    new_r = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new,
+                                         (0, pos, 0))
+    # absorb W_uk into q
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+    w_uk = wkv_b[..., : m.qk_nope_dim]                        # [C,H,N]
+    w_uv = wkv_b[..., m.qk_nope_dim:]                         # [C,H,V]
+    q_eff = jnp.einsum("bhn,chn->bhc", q_nope, w_uk)          # [B,H,C]
+    q_cat = jnp.concatenate([q_eff, q_rope], -1)              # [B,H,C+R]
+    kv_cat = jnp.concatenate([new_c, new_r], -1)[:, :, None, :]  # [B,S,1,C+R]
+    vals = new_c[:, :, None, :]                               # [B,S,1,C]
+    s_cache = new_c.shape[1]
+    valid = jnp.arange(s_cache) <= pos
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    attend = attend_fn or plain_cache_attention
+    o_c = attend(q_cat, kv_cat, vals, valid, scale=scale)     # [B,H,C]
+    o = jnp.einsum("bhc,chv->bhv", o_c.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = linear(o.reshape(b, 1, -1), p["wo"])
+    return out, {"c_kv": new_c, "k_rope": new_r}
+
+
+# ===========================================================================
+# cross-attention (encoder-decoder)
+# ===========================================================================
+
+def cross_meta(cfg) -> dict[str, ParamMeta]:
+    return gqa_meta(cfg)
+
+
+def cross_attention(p, x, enc_kv, cfg) -> jax.Array:
+    """x: [B,Sq,D]; enc_kv: dict with precomputed k,v [B,Sk,Kv,hd]."""
+    b, sq, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = linear(x, p["wq"]).reshape(b, sq, h, hd)
+    k, v = enc_kv["k"], enc_kv["v"]
+    sk = k.shape[1]
+    mask = jnp.ones((sq, sk), bool)
+    out = _sdpa_ref(q, k, v, mask, 1.0 / math.sqrt(hd))
+    return linear(out.reshape(b, sq, -1), p["wo"])
+
+
+def cross_kv(p, enc_out, cfg):
+    b, sk, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": linear(enc_out, p["wk"]).reshape(b, sk, kv, hd),
+            "v": linear(enc_out, p["wv"]).reshape(b, sk, kv, hd)}
+
+
+def cross_decode(p, x, enc_kv, cfg, attend_fn=None):
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = linear(x, p["wq"]).reshape(b, h, hd)
+    k, v = enc_kv["k"], enc_kv["v"]
+    valid = jnp.ones((k.shape[1],), bool)
+    attend = attend_fn or plain_cache_attention
+    out = attend(q, k, v, valid, scale=1.0 / math.sqrt(hd))
+    return linear(out.reshape(b, 1, -1), p["wo"])

@@ -1,0 +1,296 @@
+"""Decoder blocks, heterogeneous layer groups, and scanned stages.
+
+Compile-time discipline for 512-device GSPMD lowering on a CPU host:
+layers are grouped into *stages* of identical structure and stacked under
+``jax.lax.scan`` (params get a leading ``layers`` axis), so the HLO holds
+one copy of each distinct block body regardless of depth.  Heterogeneous
+interleaves (gemma3's 5 local:1 global, jamba's 7 mamba:1 attention with
+alternating MoE) become a *group block* — the repeating pattern unrolled
+once — scanned over its repeats.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import apply_mlp, apply_norm, mlp_meta, norm_meta
+from .meta import ParamMeta, is_meta, stack_tree
+
+
+@dataclass(frozen=True)
+class LayerSig:
+    """Structural signature of one layer."""
+    kind: str            # "A" attention | "M" mamba
+    window: int = 0      # 0 = global attention
+    use_moe: bool = False
+    has_mlp: bool = True  # SSM-only archs have no FFN sublayer
+    causal: bool = True
+
+
+class DecoderLayer:
+    """One pre-norm transformer/mamba layer per its signature."""
+
+    def __init__(self, cfg, sig: LayerSig):
+        self.cfg = cfg
+        self.sig = sig
+        if sig.kind == "A":
+            self._attn_meta = (attn.mla_meta if cfg.attention == "mla"
+                               else attn.gqa_meta)
+            self._attn_apply = (attn.mla_attention if cfg.attention == "mla"
+                                else attn.gqa_attention)
+            self._attn_prefill = (attn.mla_prefill if cfg.attention == "mla"
+                                  else attn.gqa_prefill)
+            self._attn_decode = (attn.mla_decode if cfg.attention == "mla"
+                                 else attn.gqa_decode)
+            self._cache_spec = (attn.mla_cache_spec if cfg.attention == "mla"
+                                else attn.gqa_cache_spec)
+
+    # -- params ---------------------------------------------------------
+    def abstract(self) -> dict:
+        cfg, sig = self.cfg, self.sig
+        out: dict[str, Any] = {"norm1": norm_meta(cfg)}
+        if sig.kind == "A":
+            out["attn"] = self._attn_meta(cfg)
+        else:
+            out["ssm"] = ssm_mod.ssm_meta(cfg)
+        if sig.has_mlp:
+            out["norm2"] = norm_meta(cfg)
+            if sig.use_moe:
+                out["moe"] = moe_mod.moe_meta(cfg)
+            else:
+                out["mlp"] = mlp_meta(cfg)
+        return out
+
+    # -- full sequence -----------------------------------------------------
+    def apply(self, p, x, *, positions, prefix_len: int = 0):
+        from repro.sharding.context import constrain_batch
+
+        cfg, sig = self.cfg, self.sig
+        x = constrain_batch(x)
+        aux = jnp.zeros((), jnp.float32)
+        h = apply_norm(p["norm1"], x, cfg)
+        if sig.kind == "A":
+            h = self._attn_apply(p["attn"], h, cfg, positions=positions,
+                                 window=sig.window, prefix_len=prefix_len,
+                                 causal=sig.causal)
+        else:
+            h = ssm_mod.apply_ssm(p["ssm"], h, cfg)
+        x = x + h
+        if sig.has_mlp:
+            h = apply_norm(p["norm2"], x, cfg)
+            if sig.use_moe:
+                h, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+            else:
+                h = apply_mlp(p["mlp"], h, cfg)
+            x = x + h
+        return x, aux
+
+    # -- caches ---------------------------------------------------------------
+    def cache_spec(self, batch: int, max_seq: int) -> dict:
+        cfg, sig = self.cfg, self.sig
+        if sig.kind == "A":
+            return self._cache_spec(cfg, batch, max_seq, window=sig.window)
+        return ssm_mod.ssm_cache_spec(cfg, batch, max_seq)
+
+    def prefill(self, p, x, *, positions, max_seq: int, prefix_len: int = 0):
+        cfg, sig = self.cfg, self.sig
+        h = apply_norm(p["norm1"], x, cfg)
+        if sig.kind == "A":
+            h, cache = self._attn_prefill(p["attn"], h, cfg,
+                                          positions=positions,
+                                          window=sig.window, max_seq=max_seq,
+                                          prefix_len=prefix_len)
+        else:
+            h, cache = ssm_mod.ssm_prefill(p["ssm"], h, cfg, max_seq=max_seq)
+        x = x + h
+        if sig.has_mlp:
+            h = apply_norm(p["norm2"], x, cfg)
+            if sig.use_moe:
+                h, _ = moe_mod.apply_moe(p["moe"], h, cfg)
+            else:
+                h = apply_mlp(p["mlp"], h, cfg)
+            x = x + h
+        return x, cache
+
+    def decode(self, p, cache, x, *, pos, attend_fn=None):
+        cfg, sig = self.cfg, self.sig
+        h = apply_norm(p["norm1"], x, cfg)
+        if sig.kind == "A":
+            # ring-buffer (window) caches stay local; full caches may be
+            # sequence-sharded -> flash-decoding attend_fn
+            fn = None if sig.window > 0 else attend_fn
+            h, cache = self._attn_decode(p["attn"], cache, h, cfg, pos=pos,
+                                         window=sig.window, attend_fn=fn)
+        else:
+            h, cache = ssm_mod.ssm_decode(p["ssm"], cache, h, cfg, pos=pos)
+        x = x + h
+        if sig.has_mlp:
+            h = apply_norm(p["norm2"], x, cfg)
+            if sig.use_moe:
+                h, _ = moe_mod.apply_moe(p["moe"], h, cfg)
+            else:
+                h = apply_mlp(p["mlp"], h, cfg)
+            x = x + h
+        return x, cache
+
+
+class GroupBlock:
+    """A repeating pattern of heterogeneous layers, unrolled once."""
+
+    def __init__(self, cfg, sigs: list[LayerSig]):
+        self.layers = [DecoderLayer(cfg, s) for s in sigs]
+
+    def abstract(self):
+        return {f"l{i}": lyr.abstract() for i, lyr in enumerate(self.layers)}
+
+    def apply(self, p, x, **kw):
+        aux = jnp.zeros((), jnp.float32)
+        for i, lyr in enumerate(self.layers):
+            x, a = lyr.apply(p[f"l{i}"], x, **kw)
+            aux = aux + a
+        return x, aux
+
+    def cache_spec(self, batch, max_seq):
+        return {f"l{i}": lyr.cache_spec(batch, max_seq)
+                for i, lyr in enumerate(self.layers)}
+
+    def prefill(self, p, x, **kw):
+        caches = {}
+        for i, lyr in enumerate(self.layers):
+            x, caches[f"l{i}"] = lyr.prefill(p[f"l{i}"], x, **kw)
+        return x, caches
+
+    def decode(self, p, cache, x, **kw):
+        new = {}
+        for i, lyr in enumerate(self.layers):
+            x, new[f"l{i}"] = lyr.decode(p[f"l{i}"], cache[f"l{i}"], x, **kw)
+        return x, new
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+class Stage:
+    """``repeats`` copies of one block, scanned with stacked params."""
+
+    def __init__(self, cfg, block, repeats: int):
+        self.cfg = cfg
+        self.block = block
+        self.repeats = repeats
+        self.scan = cfg.scan_layers and repeats > 1
+
+    def abstract(self):
+        metas = self.block.abstract()
+        if self.scan:
+            return stack_tree(metas, self.repeats)
+        if self.repeats == 1:
+            return {"r0": metas}
+        return {f"r{i}": self.block.abstract() for i in range(self.repeats)}
+
+    def cache_spec(self, batch, max_seq):
+        spec = self.block.cache_spec(batch, max_seq)
+        if self.scan:
+            return stack_tree(spec, self.repeats)
+        if self.repeats == 1:
+            return {"r0": spec}
+        return {f"r{i}": self.block.cache_spec(batch, max_seq)
+                for i in range(self.repeats)}
+
+    # -- full sequence -------------------------------------------------------
+    def apply(self, p, x, **kw):
+        if not self.scan:
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(self.repeats):
+                x, a = self.block.apply(p[f"r{i}"], x, **kw)
+                aux = aux + a
+            return x, aux
+
+        def body(carry, layer_p):
+            h, aux = carry
+            h, a = self.block.apply(layer_p, h, **kw)
+            return (h, aux + a), None
+
+        body = _remat(body, self.cfg.remat)
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), p)
+        return x, aux
+
+    def prefill(self, p, x, **kw):
+        if not self.scan:
+            caches = {}
+            for i in range(self.repeats):
+                x, caches[f"r{i}"] = self.block.prefill(p[f"r{i}"], x, **kw)
+            return x, caches
+
+        def body(h, layer_p):
+            h, cache = self.block.prefill(layer_p, h, **kw)
+            return h, cache
+
+        x, caches = jax.lax.scan(body, x, p)
+        return x, caches
+
+    def decode(self, p, cache, x, **kw):
+        if not self.scan:
+            new = {}
+            for i in range(self.repeats):
+                x, new[f"r{i}"] = self.block.decode(p[f"r{i}"],
+                                                    cache[f"r{i}"], x, **kw)
+            return x, new
+
+        def body(h, inp):
+            layer_p, layer_cache = inp
+            h, new_cache = self.block.decode(layer_p, layer_cache, h, **kw)
+            return h, new_cache
+
+        x, new = jax.lax.scan(body, x, (p, cache))
+        return x, new
+
+
+def build_stages(cfg) -> list[Stage]:
+    """Derive homogeneous stages from the per-layer signature sequence."""
+    sigs = []
+    for i in range(cfg.n_layers):
+        sigs.append(LayerSig(
+            kind=cfg.layer_kind(i),
+            window=cfg.window_for_layer(i),
+            use_moe=cfg.is_moe_layer(i),
+            has_mlp=(cfg.family != "ssm"),
+        ))
+    # period of the repeating structure
+    head = cfg.moe.first_k_dense if cfg.moe else 0
+    period = 1
+    for n in (len(cfg.window_pattern) or 1, len(cfg.hybrid_pattern) or 1,
+              cfg.moe.every if cfg.moe else 1):
+        period = math.lcm(period, n)
+    stages: list[Stage] = []
+    if head:
+        stages.append(Stage(cfg, DecoderLayer(cfg, sigs[0]), head))
+    body = sigs[head:]
+    n_groups = len(body) // period
+    if n_groups > 0:
+        pattern = body[:period]
+        block = (DecoderLayer(cfg, pattern[0]) if period == 1
+                 else GroupBlock(cfg, pattern))
+        stages.append(Stage(cfg, block, n_groups))
+    tail = body[n_groups * period:]
+    if tail:
+        # leftover layers (e.g. gemma3's 62 = 10*6 + 2)
+        if all(t == tail[0] for t in tail):
+            stages.append(Stage(cfg, DecoderLayer(cfg, tail[0]), len(tail)))
+        else:
+            stages.append(Stage(cfg, GroupBlock(cfg, tail), 1))
+    return stages

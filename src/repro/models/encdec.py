@@ -1,0 +1,219 @@
+"""Encoder-decoder backbone (Whisper-family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings [B, S_enc, d_model].  Encoder layers
+are bidirectional; decoder layers are causal self-attention + cross-
+attention + FFN.  RoPE is used for both stacks (deviation from Whisper's
+learned/sinusoidal embeddings — positional params would couple parameter
+shapes to sequence length; noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .blocks import DecoderLayer, LayerSig, Stage, _remat
+from .layers import (apply_mlp, apply_norm, embed, embed_meta, mlp_meta,
+                     norm_meta, unembed)
+from .meta import ParamMeta, stack_tree, tree_init, tree_structs
+
+
+class EncDecDecoderLayer:
+    """Causal self-attention + cross-attention + FFN."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def abstract(self):
+        cfg = self.cfg
+        return {"norm1": norm_meta(cfg), "self_attn": attn.gqa_meta(cfg),
+                "norm_x": norm_meta(cfg), "cross": attn.cross_meta(cfg),
+                "norm2": norm_meta(cfg), "mlp": mlp_meta(cfg)}
+
+    def apply(self, p, x, enc_out, *, positions):
+        from repro.sharding.context import constrain_batch
+
+        cfg = self.cfg
+        x = constrain_batch(x)
+        enc_out = constrain_batch(enc_out)
+        h = apply_norm(p["norm1"], x, cfg)
+        x = x + attn.gqa_attention(p["self_attn"], h, cfg,
+                                   positions=positions)
+        h = apply_norm(p["norm_x"], x, cfg)
+        kv = attn.cross_kv(p["cross"], enc_out, cfg)
+        x = x + attn.cross_attention(p["cross"], h, kv, cfg)
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + apply_mlp(p["mlp"], h, cfg)
+
+    def cache_spec(self, batch: int, max_seq: int, enc_len: int):
+        cfg = self.cfg
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {
+            "self": attn.gqa_cache_spec(cfg, batch, max_seq),
+            "cross_k": ParamMeta((batch, enc_len, kvh, hd),
+                                 ("batch", None, "kv_heads", None),
+                                 cfg.compute_dtype, "zeros"),
+            "cross_v": ParamMeta((batch, enc_len, kvh, hd),
+                                 ("batch", None, "kv_heads", None),
+                                 cfg.compute_dtype, "zeros"),
+        }
+
+    def prefill(self, p, x, enc_out, *, positions, max_seq: int):
+        cfg = self.cfg
+        h = apply_norm(p["norm1"], x, cfg)
+        h, self_cache = attn.gqa_prefill(p["self_attn"], h, cfg,
+                                         positions=positions,
+                                         max_seq=max_seq)
+        x = x + h
+        h = apply_norm(p["norm_x"], x, cfg)
+        kv = attn.cross_kv(p["cross"], enc_out, cfg)
+        x = x + attn.cross_attention(p["cross"], h, kv, cfg)
+        h = apply_norm(p["norm2"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+        return x, {"self": self_cache, "cross_k": kv["k"],
+                   "cross_v": kv["v"]}
+
+    def decode(self, p, cache, x, *, pos, attend_fn=None):
+        cfg = self.cfg
+        h = apply_norm(p["norm1"], x, cfg)
+        h, self_cache = attn.gqa_decode(p["self_attn"], cache["self"], h,
+                                        cfg, pos=pos, attend_fn=attend_fn)
+        x = x + h
+        h = apply_norm(p["norm_x"], x, cfg)
+        x = x + attn.cross_decode(p["cross"], h,
+                                  {"k": cache["cross_k"],
+                                   "v": cache["cross_v"]}, cfg)
+        h = apply_norm(p["norm2"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+        return x, {"self": self_cache, "cross_k": cache["cross_k"],
+                   "cross_v": cache["cross_v"]}
+
+
+class EncDecLM:
+    """Whisper-style backbone; encoder input is stubbed frame embeddings."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        enc_sig = LayerSig(kind="A", causal=False)
+        self.encoder = Stage(cfg, DecoderLayer(cfg, enc_sig),
+                             cfg.encoder_layers)
+        self.dec_layer = EncDecDecoderLayer(cfg)
+        self.n_dec = cfg.n_layers
+        self.scan_dec = cfg.scan_layers and self.n_dec > 1
+
+    # -- params -------------------------------------------------------------
+    def abstract_params(self):
+        cfg = self.cfg
+        dec = self.dec_layer.abstract()
+        return {
+            "embed": embed_meta(cfg),
+            "encoder": self.encoder.abstract(),
+            "enc_norm": norm_meta(cfg),
+            "decoder": (stack_tree(dec, self.n_dec) if self.scan_dec
+                        else {f"r{i}": self.dec_layer.abstract()
+                              for i in range(self.n_dec)}),
+            "final_norm": norm_meta(cfg),
+            "lm_head": ParamMeta((cfg.vocab_size, cfg.d_model),
+                                 ("vocab", "embed"), cfg.param_dtype,
+                                 "normal", 0.02),
+        }
+
+    def init(self, key):
+        return tree_init(self.abstract_params(), key)
+
+    def param_structs(self):
+        return tree_structs(self.abstract_params())
+
+    # -- forward -----------------------------------------------------------------
+    def encode(self, p, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.compute_dtype)
+        positions = jnp.arange(x.shape[1])
+        x, _ = self.encoder.apply(p["encoder"], x, positions=positions)
+        return apply_norm(p["enc_norm"], x, cfg)
+
+    def _decode_trunk(self, p, x, enc_out, positions):
+        if self.scan_dec:
+            def body(h, layer_p):
+                return self.dec_layer.apply(layer_p, h, enc_out,
+                                            positions=positions), None
+
+            body = _remat(body, self.cfg.remat)
+            x, _ = jax.lax.scan(body, x, p["decoder"])
+        else:
+            for i in range(self.n_dec):
+                x = self.dec_layer.apply(p["decoder"][f"r{i}"], x, enc_out,
+                                         positions=positions)
+        return x
+
+    def forward(self, p, batch):
+        cfg = self.cfg
+        enc_out = self.encode(p, batch["frames"])
+        x = embed(p["embed"], batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+        x = self._decode_trunk(p, x, enc_out, positions)
+        h = apply_norm(p["final_norm"], x, cfg)
+        return unembed(h, p["lm_head"], cfg)
+
+    def loss_fn(self, p, batch):
+        from .transformer import cross_entropy_loss
+
+        logits = self.forward(p, batch)
+        loss = cross_entropy_loss(logits, batch["labels"])
+        return loss, {"ce": loss}
+
+    # -- serving --------------------------------------------------------------------
+    def cache_spec(self, batch: int, max_seq: int, enc_len: int):
+        spec = self.dec_layer.cache_spec(batch, max_seq, enc_len)
+        if self.scan_dec:
+            return stack_tree(spec, self.n_dec)
+        return {f"r{i}": self.dec_layer.cache_spec(batch, max_seq, enc_len)
+                for i in range(self.n_dec)}
+
+    def init_cache(self, batch: int, max_seq: int, enc_len: int):
+        return tree_init(self.cache_spec(batch, max_seq, enc_len),
+                         jax.random.PRNGKey(0))
+
+    def prefill(self, p, frames, tokens, *, max_seq: int):
+        cfg = self.cfg
+        enc_out = self.encode(p, frames)
+        x = embed(p["embed"], tokens, cfg)
+        positions = jnp.arange(x.shape[1])
+        if self.scan_dec:
+            def body(h, layer_p):
+                return self.dec_layer.prefill(layer_p, h, enc_out,
+                                              positions=positions,
+                                              max_seq=max_seq)
+
+            x, caches = jax.lax.scan(body, x, p["decoder"])
+        else:
+            caches = {}
+            for i in range(self.n_dec):
+                x, caches[f"r{i}"] = self.dec_layer.prefill(
+                    p["decoder"][f"r{i}"], x, enc_out, positions=positions,
+                    max_seq=max_seq)
+        h = apply_norm(p["final_norm"], x[:, -1:], cfg)
+        return unembed(h, p["lm_head"], cfg)[:, 0], caches
+
+    def decode_step(self, p, cache, token, pos, *, attend_fn=None):
+        cfg = self.cfg
+        x = embed(p["embed"], token, cfg)
+        if self.scan_dec:
+            def body(h, inp):
+                layer_p, layer_cache = inp
+                return self.dec_layer.decode(layer_p, layer_cache, h,
+                                             pos=pos, attend_fn=attend_fn)
+
+            x, new_cache = jax.lax.scan(body, x, (p["decoder"], cache))
+        else:
+            new_cache = {}
+            for i in range(self.n_dec):
+                x, new_cache[f"r{i}"] = self.dec_layer.decode(
+                    p["decoder"][f"r{i}"], cache[f"r{i}"], x, pos=pos,
+                    attend_fn=attend_fn)
+        h = apply_norm(p["final_norm"], x, cfg)
+        return unembed(h, p["lm_head"], cfg)[:, 0], new_cache

@@ -1,0 +1,133 @@
+"""Functional model layers for the production substrate.
+
+Projections (the MXU-bound parameter matmuls) route through the tensor
+dispatch (``repro.core.tensor.ops``) so the paper's backend-swap property
+(§5.2.4) reaches the entire model zoo; norms probe the active backend for
+a fused kernel.  Glue (reshapes/einsum attention math) uses jnp directly —
+those paths are swapped at a coarser grain via ``attention_impl``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tensor import ops as T
+from repro.core.tensor.dispatch import current_backend
+from .meta import ParamMeta
+
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[..., D] @ [D, F] -> [..., F] through the dispatch layer."""
+    nd = x.ndim
+    dn = (((nd - 1,), (0,)), ((), ()))
+    return T.dot_general(x, w, dn, preferred_element_type=None)
+
+
+def linear_meta(d_in: int, d_out: int, axes: tuple, dtype,
+                init: str = "fan_in") -> ParamMeta:
+    return ParamMeta((d_in, d_out), axes, dtype, init)
+
+
+# -- norms --------------------------------------------------------------------
+
+def norm_meta(cfg) -> dict[str, ParamMeta]:
+    if cfg.norm == "layernorm":
+        return {"scale": ParamMeta((cfg.d_model,), ("embed",),
+                                   cfg.param_dtype, "ones"),
+                "bias": ParamMeta((cfg.d_model,), ("embed",),
+                                  cfg.param_dtype, "zeros")}
+    return {"scale": ParamMeta((cfg.d_model,), ("embed",),
+                               cfg.param_dtype, "ones")}
+
+
+def apply_norm(p: dict, x: jax.Array, cfg) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = x32.mean(-1, keepdims=True)
+        v = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(v + 1e-5)
+        out = out * p["scale"].astype(jnp.float32) \
+            + p["bias"].astype(jnp.float32)
+        return out.astype(x.dtype)
+    backend = current_backend()
+    if hasattr(backend, "rms_norm_fused") and x.ndim in (2, 3):
+        return backend.rms_norm_fused(x, p["scale"]).astype(x.dtype)
+    ms = (x32 * x32).mean(-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + 1e-6)
+            * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- embeddings ------------------------------------------------------------------
+
+def embed_meta(cfg) -> ParamMeta:
+    return ParamMeta((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                     cfg.param_dtype, "normal", 0.02)
+
+
+def embed(table: jax.Array, ids: jax.Array, cfg) -> jax.Array:
+    out = T.take(table, ids, axis=0)
+    return out.astype(cfg.compute_dtype)
+
+
+def unembed(x: jax.Array, table: jax.Array, cfg) -> jax.Array:
+    """Logits: [..., D] @ [V, D]^T, fp32 accumulation."""
+    dn = (((x.ndim - 1,), (1,)), ((), ()))
+    logits = T.dot_general(x, table, dn, preferred_element_type=jnp.float32)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# -- gated MLP ---------------------------------------------------------------------
+
+def mlp_meta(cfg, d_ff: int | None = None,
+             ff_axis: str = "mlp") -> dict[str, ParamMeta]:
+    d_ff = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    m = {"w_up": ParamMeta((cfg.d_model, d_ff), ("embed", ff_axis), dt,
+                           "fan_in"),
+         "w_down": ParamMeta((d_ff, cfg.d_model), (ff_axis, "embed"), dt,
+                             "fan_in")}
+    if cfg.act in ("silu", "geglu"):   # gated variants
+        m["w_gate"] = ParamMeta((cfg.d_model, d_ff), ("embed", ff_axis), dt,
+                                "fan_in")
+    return m
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg) -> jax.Array:
+    up = linear(x, p["w_up"])
+    if "w_gate" in p:
+        act = jax.nn.gelu if cfg.act == "geglu" else jax.nn.silu
+        h = act(linear(x, p["w_gate"]).astype(jnp.float32)).astype(
+            x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return linear(h, p["w_down"])
+
+
+# -- RoPE ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D] (or [..., H, D] with scalar pos); rotate pairs."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : d // 2], x32[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x

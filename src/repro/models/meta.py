@@ -1,0 +1,87 @@
+"""ParamMeta: single source of truth for parameter shape, dtype, logical
+sharding axes, and initializer.
+
+``abstract_params`` trees built from these drive three consumers without
+drift: (1) real initialization for smoke tests / small-scale training,
+(2) ``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run (no
+allocation), (3) PartitionSpec derivation via ``repro.sharding.rules``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamMeta:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]      # logical axis names, len == ndim
+    dtype: Any = jnp.float32
+    init: str = "normal"               # normal | zeros | ones | fan_in
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def nbytes(self) -> int:
+        return math.prod(self.shape) * jnp.dtype(self.dtype).itemsize
+
+    def instantiate(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "fan_in":
+            fan_in = self.shape[0] if len(self.shape) >= 1 else 1
+            std = 1.0 / math.sqrt(max(1, fan_in))
+            return (jax.random.normal(key, self.shape) * std).astype(self.dtype)
+        return (jax.random.normal(key, self.shape) * self.scale).astype(
+            self.dtype)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def tree_structs(metas: Any) -> Any:
+    """ShapeDtypeStruct tree for .lower() — zero allocation."""
+    return jax.tree.map(lambda m: m.struct(), metas, is_leaf=is_meta)
+
+
+def tree_init(metas: Any, key) -> Any:
+    leaves, treedef = jax.tree.flatten(metas, is_leaf=is_meta)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [m.instantiate(k) for m, k in zip(leaves, keys)])
+
+
+def tree_axes(metas: Any) -> Any:
+    return jax.tree.map(lambda m: m.axes, metas, is_leaf=is_meta)
+
+
+def tree_nbytes(metas: Any) -> int:
+    return sum(m.nbytes() for m in jax.tree.leaves(metas, is_leaf=is_meta))
+
+
+def tree_params_count(metas: Any) -> int:
+    return sum(math.prod(m.shape)
+               for m in jax.tree.leaves(metas, is_leaf=is_meta))
+
+
+def stacked(meta: ParamMeta, n: int, axis_name: str = "layers") -> ParamMeta:
+    """Add a leading scan axis (stacked layers for lax.scan)."""
+    return ParamMeta((n,) + meta.shape, (axis_name,) + meta.axes,
+                     meta.dtype, meta.init, meta.scale)
+
+
+def stack_tree(metas: Any, n: int, axis_name: str = "layers") -> Any:
+    return jax.tree.map(lambda m: stacked(m, n, axis_name), metas,
+                        is_leaf=is_meta)

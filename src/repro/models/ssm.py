@@ -1,0 +1,242 @@
+"""Mamba-2 / SSD (state-space duality) block.
+
+TPU-native adaptation (DESIGN.md §6): the SSD *chunked* form replaces the
+sequential selective scan with per-chunk matmuls (MXU-friendly) plus a
+short inter-chunk state recurrence — this is the form our Pallas kernel
+targets.  The naive O(S) recurrence lives in kernels/ref.py as the oracle.
+
+Shapes follow Mamba-2 with a single B/C group:
+  x: [B, S, H, P]   (H = d_inner/head_dim heads, P = head_dim)
+  dt: [B, S, H]     (softplus-discretized step)
+  A: [H]            (negative scalar decay per head)
+  B, C: [B, S, N]   (input/output projections, N = d_state)
+State h: [B, H, P, N].
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear
+from .meta import ParamMeta
+
+
+def ssm_meta(cfg) -> dict[str, ParamMeta]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    n = s.d_state
+    dt = cfg.param_dtype
+    return {
+        "in_x": ParamMeta((d, di), ("embed", "mlp"), dt, "fan_in"),
+        "in_z": ParamMeta((d, di), ("embed", "mlp"), dt, "fan_in"),
+        "in_B": ParamMeta((d, n), ("embed", None), dt, "fan_in"),
+        "in_C": ParamMeta((d, n), ("embed", None), dt, "fan_in"),
+        "in_dt": ParamMeta((d, h), ("embed", "heads"), dt, "fan_in"),
+        "conv_x": ParamMeta((s.d_conv, di), (None, "mlp"), dt, "normal", 0.1),
+        "conv_B": ParamMeta((s.d_conv, n), (None, None), dt, "normal", 0.1),
+        "conv_C": ParamMeta((s.d_conv, n), (None, None), dt, "normal", 0.1),
+        "A_log": ParamMeta((h,), ("heads",), jnp.float32, "zeros"),
+        "D": ParamMeta((h,), ("heads",), jnp.float32, "ones"),
+        "dt_bias": ParamMeta((h,), ("heads",), jnp.float32, "zeros"),
+        "out_norm": ParamMeta((di,), ("mlp",), dt, "ones"),
+        "out_proj": ParamMeta((di, d), ("mlp", "embed"), dt, "fan_in"),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i: i + x.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} a[..., k].
+
+    a: [..., Q] -> [..., Q, Q] lower-triangular cumulative sums.
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD. Returns (y [B,S,H,P], h_final [B,H,P,N]).
+
+    Equivalent to the recurrence
+      h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_tᵀ;   y_t = C_t · h_t
+    evaluated chunk-parallel: intra-chunk via a masked attention-like
+    matmul, inter-chunk via a scan over per-chunk states.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    assert s % q == 0, (s, q)
+    c = s // q
+    dtA = dt * A[None, None, :]                              # [B,S,H] (<=0)
+    xr = x.reshape(b, c, q, h, p)
+    dtr = dt.reshape(b, c, q, h)
+    ar = dtA.reshape(b, c, q, h).transpose(0, 3, 1, 2)       # [B,H,C,Q]
+    br = B.reshape(b, c, q, n)
+    cr = C.reshape(b, c, q, n)
+
+    a_cum = jnp.cumsum(ar, -1)                               # [B,H,C,Q]
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(ar))                                 # [B,H,C,Q,Q]
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cr, br)           # [B,C,Q,Q]
+    y_diag = jnp.einsum("bcqs,bhcqs,bcsh,bcshp->bcqhp",
+                        scores, L, dtr, xr)
+    # 2) per-chunk end states
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)          # [B,H,C,Q]
+    states = jnp.einsum("bcqn,bhcq,bcqh,bcqhp->bchpn",
+                        br, decay_to_end, dtr, xr)           # [B,C,H,P,N]
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                    # [B,H,C]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp                                        # [B,H,P,N],[B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                    # emit h BEFORE chunk
+
+    sts = states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)  # [C,B,H,P,N]
+    decs = chunk_decay.transpose(2, 0, 1)                      # [C,B,H]
+    h_final, h_prevs = jax.lax.scan(step, h0.astype(jnp.float32),
+                                    (sts, decs))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # [B,C,H,P,N]
+    # 4) inter-chunk contribution
+    in_decay = jnp.exp(a_cum)                                # [B,H,C,Q]
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", cr, h_prevs, in_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssm_cache_spec(cfg, batch: int, max_seq: int, window: int = 0):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, h, n = s.d_inner(d), s.n_heads(d), s.d_state
+    return {
+        "h": ParamMeta((batch, h, s.head_dim, n),
+                       ("batch", "heads", None, None), jnp.float32, "zeros"),
+        "conv_x": ParamMeta((batch, s.d_conv - 1, di),
+                            ("batch", None, "mlp"), cfg.compute_dtype,
+                            "zeros"),
+        "conv_B": ParamMeta((batch, s.d_conv - 1, n),
+                            ("batch", None, None), cfg.compute_dtype,
+                            "zeros"),
+        "conv_C": ParamMeta((batch, s.d_conv - 1, n),
+                            ("batch", None, None), cfg.compute_dtype,
+                            "zeros"),
+    }
+
+
+def _project(p, x, cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    xs = linear(x, p["in_x"])
+    z = linear(x, p["in_z"])
+    Bp = linear(x, p["in_B"])
+    Cp = linear(x, p["in_C"])
+    dt = jax.nn.softplus(
+        linear(x, p["in_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return xs, z, Bp, Cp, dt
+
+
+def _finish(p, y, z, x_heads, cfg):
+    """Skip connection + gated RMSNorm + out projection."""
+    s = cfg.ssm
+    b, slen = y.shape[:2]
+    y = y + x_heads * p["D"].astype(jnp.float32)[None, None, :, None].astype(
+        y.dtype)
+    di = s.d_inner(cfg.d_model)
+    y = y.reshape(b, slen, di)
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt((g * g).mean(-1, keepdims=True) + 1e-6)
+    y = (g * p["out_norm"].astype(jnp.float32)).astype(y.dtype)
+    return linear(y, p["out_proj"])
+
+
+def apply_ssm(p, x, cfg):
+    """Full-sequence SSD. x: [B, S, D] -> [B, S, D]."""
+    s = cfg.ssm
+    b, slen, _ = x.shape
+    h = s.n_heads(cfg.d_model)
+    xs, z, Bp, Cp, dt = _project(p, x, cfg)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"]).astype(jnp.float32)) \
+        .astype(x.dtype)
+    Bp = _causal_conv(Bp, p["conv_B"])
+    Cp = _causal_conv(Cp, p["conv_C"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, slen, h, s.head_dim)
+    if cfg.attention_impl == "pallas" and jax.default_backend() == "tpu":
+        from repro.kernels import ops as kops
+
+        y, _ = kops.ssd_chunk(xh, dt, A, Bp, Cp, chunk=s.chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bp, Cp, chunk=min(s.chunk, slen))
+    return _finish(p, y, z, xh, cfg)
+
+
+def ssm_prefill(p, x, cfg, *, max_seq: int, **_):
+    s = cfg.ssm
+    b, slen, _ = x.shape
+    h = s.n_heads(cfg.d_model)
+    xs, z, Bp, Cp, dt = _project(p, x, cfg)
+    conv_tail = {"conv_x": xs[:, -(s.d_conv - 1):],
+                 "conv_B": Bp[:, -(s.d_conv - 1):],
+                 "conv_C": Cp[:, -(s.d_conv - 1):]}
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"]).astype(jnp.float32)) \
+        .astype(x.dtype)
+    Bp = _causal_conv(Bp, p["conv_B"])
+    Cp = _causal_conv(Cp, p["conv_C"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, slen, h, s.head_dim)
+    y, h_final = ssd_chunked(xh, dt, A, Bp, Cp, chunk=min(s.chunk, slen))
+    out = _finish(p, y, z, xh, cfg)
+    cache = {"h": h_final, **conv_tail}
+    return out, cache
+
+
+def ssm_decode(p, cache, x, cfg, *, pos=None, **_):
+    """One-step recurrence: O(1) in sequence length."""
+    s = cfg.ssm
+    b = x.shape[0]
+    h = s.n_heads(cfg.d_model)
+    xs, z, Bp, Cp, dt = _project(p, x, cfg)                  # seq dim = 1
+
+    def conv_step(tail, new, w):
+        full = jnp.concatenate([tail, new], 1)               # [B, K, C]
+        out = (full.astype(jnp.float32)
+               * w.astype(jnp.float32)[None]).sum(1, keepdims=True)
+        return out.astype(new.dtype), full[:, 1:]
+
+    xs_c, tail_x = conv_step(cache["conv_x"], xs, p["conv_x"])
+    Bp_c, tail_B = conv_step(cache["conv_B"], Bp, p["conv_B"])
+    Cp_c, tail_C = conv_step(cache["conv_C"], Cp, p["conv_C"])
+    xs_c = jax.nn.silu(xs_c.astype(jnp.float32)).astype(x.dtype)
+    A = -jnp.exp(p["A_log"])                                 # [H]
+    dt1 = dt[:, 0]                                           # [B,H]
+    xh = xs_c.reshape(b, 1, h, s.head_dim)
+    x1 = xh[:, 0].astype(jnp.float32)                        # [B,H,P]
+    decay = jnp.exp(dt1 * A[None])                           # [B,H]
+    hs = cache["h"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt1, Bp_c[:, 0].astype(jnp.float32), x1)
+    y1 = jnp.einsum("bn,bhpn->bhp", Cp_c[:, 0].astype(jnp.float32), hs)
+    y = y1[:, None].astype(x.dtype)                          # [B,1,H,P]
+    out = _finish(p, y, z, xh, cfg)
+    return out, {"h": hs, "conv_x": tail_x, "conv_B": tail_B,
+                 "conv_C": tail_C}

@@ -1,0 +1,181 @@
+"""Decoder-only LM facade (also hosts the VLM variant — image embeddings
+arrive pre-computed from the stubbed SigLIP frontend and are prepended as a
+bidirectional prefix).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import DecoderLayer, LayerSig, Stage, build_stages
+from .layers import apply_norm, embed, embed_meta, norm_meta, unembed
+from .meta import ParamMeta, tree_init, tree_structs
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       z_loss: float = 0.0) -> jax.Array:
+    """Mean next-token CE; logits fp32 [B,S,V], labels int [B,S]."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - gold).mean()
+    if z_loss > 0:
+        loss = loss + z_loss * (lse ** 2).mean()
+    return loss
+
+
+class LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.stages = build_stages(cfg)
+        # multi-token-prediction head (DeepSeek-V3): one extra layer that
+        # predicts token t+2 from the trunk's hidden state
+        self._mtp_layer = (DecoderLayer(cfg, LayerSig(kind="A"))
+                           if cfg.mtp_depth > 0 else None)
+
+    # -- params -----------------------------------------------------------
+    def abstract_params(self) -> dict:
+        cfg = self.cfg
+        out: dict[str, Any] = {
+            "embed": embed_meta(cfg),
+            "final_norm": norm_meta(cfg),
+            "stages": [s.abstract() for s in self.stages],
+        }
+        if not cfg.tie_embeddings:
+            out["lm_head"] = ParamMeta((cfg.vocab_size, cfg.d_model),
+                                       ("vocab", "embed"), cfg.param_dtype,
+                                       "normal", 0.02)
+        if self._mtp_layer is not None:
+            out["mtp"] = {"layer": self._mtp_layer.abstract(),
+                          "norm": norm_meta(cfg)}
+        return out
+
+    def init(self, key):
+        return tree_init(self.abstract_params(), key)
+
+    def param_structs(self):
+        return tree_structs(self.abstract_params())
+
+    # -- forward -------------------------------------------------------------
+    def _trunk(self, p, x, *, positions, prefix_len: int = 0):
+        aux = jnp.zeros((), jnp.float32)
+        for stage, sp in zip(self.stages, p["stages"]):
+            x, a = stage.apply(sp, x, positions=positions,
+                               prefix_len=prefix_len)
+            aux = aux + a
+        return x, aux
+
+    def _head_table(self, p):
+        return p["embed"] if self.cfg.tie_embeddings else p["lm_head"]
+
+    def forward(self, p, tokens, *, image_embeds=None):
+        cfg = self.cfg
+        x = embed(p["embed"], tokens, cfg)
+        prefix_len = 0
+        if image_embeds is not None:
+            x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
+            prefix_len = image_embeds.shape[1]
+        positions = jnp.arange(x.shape[1])
+        x, aux = self._trunk(p, x, positions=positions, prefix_len=prefix_len)
+        h = apply_norm(p["final_norm"], x, cfg)
+        logits = unembed(h, self._head_table(p), cfg)
+        return logits, aux, x
+
+    # -- training loss ------------------------------------------------------------
+    def loss_fn(self, p, batch: dict):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        image_embeds = batch.get("image_embeds")
+        x = embed(p["embed"], tokens, cfg)
+        prefix_len = 0
+        if image_embeds is not None:
+            x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
+            prefix_len = image_embeds.shape[1]
+            pad = jnp.zeros(
+                (labels.shape[0], prefix_len), labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        positions = jnp.arange(x.shape[1])
+        x, aux = self._trunk(p, x, positions=positions, prefix_len=prefix_len)
+        h = apply_norm(p["final_norm"], x, cfg)
+        table = self._head_table(p)
+        if cfg.ce_impl == "chunked":
+            loss = self._chunked_ce(h, table, labels)
+        else:
+            logits = unembed(h, table, cfg)
+            loss = cross_entropy_loss(logits, labels)
+        metrics = {"ce": loss, "moe_aux": aux}
+        loss = loss + aux
+        if self._mtp_layer is not None:
+            mtp_loss = self._mtp_loss(p, x, positions, labels)
+            metrics["mtp"] = mtp_loss
+            loss = loss + 0.3 * mtp_loss
+        return loss, metrics
+
+    def _mtp_loss(self, p, x, positions, labels):
+        """Predict token t+2 from trunk hidden state (depth-1 MTP)."""
+        h, _ = self._mtp_layer.apply(p["mtp"]["layer"], x,
+                                     positions=positions)
+        h = apply_norm(p["mtp"]["norm"], h, self.cfg)
+        logits = unembed(h[:, :-1], self._head_table(p), self.cfg)
+        return cross_entropy_loss(logits, labels[:, 1:])
+
+    def _chunked_ce(self, h, table, labels, n_chunks: int = 16):
+        """Never materializes [B, S, V]: per-chunk unembed + CE.
+
+        Activation-memory optimization (§Perf): the dense-CE logits tensor
+        is the single largest activation for big-vocab models.
+        """
+        cfg = self.cfg
+        b, s, d = h.shape
+        while s % n_chunks != 0:
+            n_chunks //= 2
+        hs = h.reshape(b, n_chunks, s // n_chunks, d).swapaxes(0, 1)
+        ls = labels.reshape(b, n_chunks, s // n_chunks).swapaxes(0, 1)
+
+        def chunk_loss(hc_lc):
+            hc, lc = hc_lc
+            logits = unembed(hc, table, cfg)
+            return cross_entropy_loss(logits, lc)
+
+        losses = jax.lax.map(chunk_loss, (hs, ls))
+        return losses.mean()
+
+    # -- serving ------------------------------------------------------------------
+    def cache_spec(self, batch: int, max_seq: int):
+        return [s.cache_spec(batch, max_seq) for s in self.stages]
+
+    def init_cache(self, batch: int, max_seq: int):
+        return tree_init(self.cache_spec(batch, max_seq),
+                         jax.random.PRNGKey(0))
+
+    def prefill(self, p, tokens, *, max_seq: int, image_embeds=None):
+        cfg = self.cfg
+        x = embed(p["embed"], tokens, cfg)
+        prefix_len = 0
+        if image_embeds is not None:
+            x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
+            prefix_len = image_embeds.shape[1]
+        positions = jnp.arange(x.shape[1])
+        caches = []
+        for stage, sp in zip(self.stages, p["stages"]):
+            x, cache = stage.prefill(sp, x, positions=positions,
+                                     max_seq=max_seq, prefix_len=prefix_len)
+            caches.append(cache)
+        h = apply_norm(p["final_norm"], x[:, -1:], cfg)
+        logits = unembed(h, self._head_table(p), cfg)[:, 0]
+        return logits, caches
+
+    def decode_step(self, p, cache, token, pos, *, attend_fn=None):
+        """token: [B, 1] int; pos: scalar int32. Returns ([B, V], cache)."""
+        cfg = self.cfg
+        x = embed(p["embed"], token, cfg)
+        new_caches = []
+        for stage, sp, sc in zip(self.stages, p["stages"], cache):
+            x, nc = stage.decode(sp, sc, x, pos=pos, attend_fn=attend_fn)
+            new_caches.append(nc)
+        h = apply_norm(p["final_norm"], x, cfg)
+        logits = unembed(h, self._head_table(p), cfg)[:, 0]
+        return logits, new_caches

@@ -1,0 +1,4 @@
+from .decode_attention import make_flash_decode_attend
+from .engine import Request, ServeEngine
+
+__all__ = ["make_flash_decode_attend", "Request", "ServeEngine"]

@@ -1,0 +1,106 @@
+"""Batched serving engine: continuous-batching-lite over a static slot pool.
+
+Requests join a waiting queue; free cache slots are assigned per step
+(static shapes — TPU-friendly), prefill runs per-request, then all active
+slots advance one token per ``decode`` call.  Finished slots (EOS or
+max-tokens) are returned and recycled.  This is the serving counterpart of
+the train loop and the driver behind examples/serve_lm.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, batch_slots: int, max_seq: int,
+                 attend_fn=None):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.attend_fn = attend_fn
+        self._decode = jax.jit(self._decode_fn)
+        self.waiting: list[Request] = []
+        self.active: dict[int, Request] = {}     # slot -> request
+        self.slot_pos = np.zeros(batch_slots, np.int32)
+        self.slot_tok = np.zeros((batch_slots, 1), np.int32)
+        self.cache = model.init_cache(batch_slots, max_seq)
+        self.steps = 0
+
+    def _decode_fn(self, params, cache, tok, pos):
+        logits, cache = self.model.decode_step(params, cache, tok, pos,
+                                               attend_fn=self.attend_fn)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.slots) if s not in self.active]
+        while free and self.waiting:
+            slot = free.pop()
+            req = self.waiting.pop(0)
+            self._prefill_into_slot(slot, req)
+            self.active[slot] = req
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        # per-request prefill: feed prompt tokens through decode steps
+        # (simple and slot-local; bulk prefill is a batch-level fast path)
+        for i, tok in enumerate(req.prompt[:-1]):
+            t = jnp.full((self.slots, 1), 0, jnp.int32).at[slot, 0].set(tok)
+            _, self.cache = self._decode(self.params, self.cache, t,
+                                         jnp.int32(i))
+        self.slot_pos[slot] = len(req.prompt) - 1
+        self.slot_tok[slot, 0] = req.prompt[-1]
+
+    # -- stepping ---------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """Advance all active slots one token; returns finished requests."""
+        self._admit()
+        if not self.active:
+            return []
+        pos = int(self.slot_pos.max())
+        tok = jnp.asarray(self.slot_tok)
+        next_tok, self.cache = self._decode(self.params, self.cache, tok,
+                                            jnp.int32(pos))
+        next_np = np.asarray(next_tok)
+        finished = []
+        for slot, req in list(self.active.items()):
+            t = int(next_np[slot, 0])
+            req.generated.append(t)
+            self.slot_tok[slot, 0] = t
+            self.slot_pos[slot] += 1
+            if ((req.eos_id is not None and t == req.eos_id)
+                    or len(req.generated) >= req.max_new_tokens
+                    or self.slot_pos[slot] >= self.max_seq - 1):
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+        self.steps += 1
+        return finished
+
+    def run_until_done(self, max_steps: int = 10000) -> list[Request]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.active and not self.waiting:
+                break
+        return out

@@ -1,0 +1,5 @@
+from .rules import (DEFAULT_RULES, FSDP_RULES, ShardingRules, batch_spec,
+                    make_rules)
+
+__all__ = ["DEFAULT_RULES", "FSDP_RULES", "ShardingRules", "batch_spec",
+           "make_rules"]

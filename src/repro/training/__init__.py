@@ -1,0 +1,9 @@
+from .checkpoint import CheckpointManager
+from .fault_tolerance import (HeartbeatTracker, StragglerMonitor,
+                              run_with_retries)
+from .pipeline import bubble_fraction, pipeline_apply
+from .train_loop import TrainConfig, make_step_fn, train
+
+__all__ = ["CheckpointManager", "HeartbeatTracker", "StragglerMonitor",
+           "run_with_retries", "bubble_fraction", "pipeline_apply",
+           "TrainConfig", "make_step_fn", "train"]

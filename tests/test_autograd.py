@@ -1,0 +1,183 @@
+"""Tape autograd: oracle (jax.grad) equivalence, §5.2.1 customizations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autograd as ag
+from repro.core.autograd import functions as F
+from repro.core.tensor import ops
+
+
+def _tree_allclose(a, b, rtol=1e-4, atol=1e-5):
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), rtol=rtol, atol=atol), a, b)
+
+
+UNARY = {
+    "exp": (F.exp, jnp.exp),
+    "tanh": (F.tanh, jnp.tanh),
+    "relu": (F.relu, jax.nn.relu),
+    "sigmoid": (F.sigmoid, jax.nn.sigmoid),
+    "neg": (F.neg, jnp.negative),
+    "gelu": (F.gelu, None),
+    "silu": (F.silu, None),
+}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ops_seq=st.lists(st.sampled_from(sorted(UNARY)), min_size=1, max_size=5),
+    rows=st.integers(2, 6), cols=st.integers(2, 6), seed=st.integers(0, 99),
+)
+def test_tape_matches_jax_grad_on_random_chains(ops_seq, rows, cols, seed):
+    """Property: for random unary-op chains over a matmul, the tape's
+    gradients equal jax.grad's."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (cols, rows)) * 0.5
+
+    def tape_loss(params):
+        h = F.matmul(ag.Variable(x), params["w"])
+        for name in ops_seq:
+            h = UNARY[name][0](h)
+        return F.mean(F.mul(h, h))
+
+    def jax_loss(params):
+        h = x @ params["w"]
+        for name in ops_seq:
+            fn = UNARY[name][1]
+            if fn is None:
+                fn = {"gelu": lambda v: jax.nn.gelu(v, approximate=False),
+                      "silu": jax.nn.silu}[name]
+            h = fn(h)
+        return jnp.mean(h * h)
+
+    val, grads = ag.value_and_grad(tape_loss)({"w": w})
+    jval, jgrads = jax.value_and_grad(jax_loss)({"w": w})
+    np.testing.assert_allclose(val, jval, rtol=1e-4, atol=1e-6)
+    _tree_allclose(grads, jgrads)
+
+
+@pytest.mark.parametrize("reduction", ["sum", "mean", "max"])
+def test_reductions_and_shape_ops(reduction):
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 4, 5))
+
+    def tape_loss(p):
+        h = F.transpose(F.reshape(p["x"], (3, 20)), (1, 0))
+        r = getattr(F, reduction)(h, axis=0)
+        return F.sum(F.mul(r, r))
+
+    def jax_loss(p):
+        h = p["x"].reshape(3, 20).T
+        r = getattr(jnp, reduction)(h, axis=0)
+        return jnp.sum(r * r)
+
+    val, grads = ag.value_and_grad(tape_loss)({"x": x})
+    jval, jgrads = jax.value_and_grad(jax_loss)({"x": x})
+    np.testing.assert_allclose(val, jval, rtol=1e-5)
+    _tree_allclose(grads, jgrads)
+
+
+def test_broadcasting_binary_grads():
+    a = jax.random.normal(jax.random.PRNGKey(0), (4, 1, 3))
+    b = jax.random.normal(jax.random.PRNGKey(1), (5, 3))
+
+    for tape_op, jax_op in [(F.add, jnp.add), (F.mul, jnp.multiply),
+                            (F.sub, jnp.subtract), (F.div, jnp.divide),
+                            (F.maximum, jnp.maximum)]:
+        val, grads = ag.value_and_grad(
+            lambda p: F.sum(tape_op(p["a"], p["b"])))({"a": a, "b": b})
+        jval, jgrads = jax.value_and_grad(
+            lambda p: jnp.sum(jax_op(p["a"], p["b"])))({"a": a, "b": b})
+        np.testing.assert_allclose(val, jval, rtol=1e-5)
+        _tree_allclose(grads, jgrads)
+
+
+def test_softmax_logsoftmax_ce_grads():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (6, 10))
+    labels = jnp.arange(6) % 10
+
+    val, grads = ag.value_and_grad(
+        lambda p: F.cross_entropy(p["l"], labels))({"l": logits})
+    jval, jgrads = jax.value_and_grad(
+        lambda p: -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(p["l"]), labels[:, None], 1)))({"l": logits})
+    np.testing.assert_allclose(val, jval, rtol=1e-5)
+    _tree_allclose(grads, jgrads)
+
+
+def test_tape_under_jit_and_scanless_stack():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+
+    def loss(p):
+        h = F.relu(F.matmul(ag.Variable(x), p["w1"]))
+        return F.mean(F.mul(h, h))
+
+    params = {"w1": jax.random.normal(jax.random.PRNGKey(1), (16, 8))}
+    eager = ag.value_and_grad(loss)(params)
+    jitted = jax.jit(ag.value_and_grad(loss))(params)
+    _tree_allclose(eager, jitted)
+
+
+def test_graph_pruning_cuts_subtrees():
+    """§5.2.1 on-the-fly pruning: cut gradient flow into a named subtree."""
+    x = ag.Variable(jnp.ones((4,)), requires_grad=True)
+    y = ag.Variable(jnp.ones((4,)), requires_grad=True)
+    pruned = F.exp(x)                    # this branch will be pruned
+    kept = F.mul(y, y)
+    out = F.sum(F.add(pruned, kept))
+    out.backward(prune=lambda node: node.name == "exp")
+    assert x.grad is None                # flow into exp subtree was cut
+    np.testing.assert_allclose(np.asarray(y.grad), 2 * np.ones(4))
+
+
+def test_fused_composite_is_one_node():
+    """§5.2.1 pre-fused gradients: composite records a single tape node."""
+    x = ag.Variable(jnp.ones((8,)) * 0.3, requires_grad=True)
+
+    def composite(v):
+        return ops.mul(ops.tanh(v), ops.exp(v))
+
+    fused = ag.fused(composite, name="tanh_exp")(x)
+    assert ag.tape_size(fused) == 1
+    unfused = F.mul(F.tanh(x), F.exp(x))
+    assert ag.tape_size(unfused) == 3
+    loss_f = F.sum(fused)
+    loss_f.backward()
+    gf = np.asarray(x.grad)
+    x.zero_grad()
+    F.sum(unfused).backward()
+    np.testing.assert_allclose(gf, np.asarray(x.grad), rtol=1e-5)
+
+
+def test_free_on_use_node_lifetime():
+    """§5.2.1 custom node lifetime: consumed nodes refuse reuse."""
+    x = ag.Variable(jnp.ones((4,)), requires_grad=True)
+    y = F.sum(F.exp(x))
+    y.backward(free_on_use=True)
+    with pytest.raises(RuntimeError, match="consumed"):
+        y.backward()
+    # retain_graph equivalent
+    x2 = ag.Variable(jnp.ones((4,)), requires_grad=True)
+    y2 = F.sum(F.exp(x2))
+    y2.backward(free_on_use=False)
+    y2.backward(free_on_use=False)  # fine
+
+
+def test_no_grad_and_detach():
+    x = ag.Variable(jnp.ones((4,)), requires_grad=True)
+    with ag.no_grad():
+        y = F.mul(x, x)
+    assert y.node is None
+    z = F.mul(x.detach(), x.detach())
+    assert z.node is None
+
+
+def test_grad_accumulation_across_backwards():
+    x = ag.Variable(jnp.ones((3,)), requires_grad=True)
+    F.sum(F.mul(x, x)).backward()
+    g1 = np.asarray(x.grad)
+    F.sum(F.mul(x, x)).backward()   # accumulates
+    np.testing.assert_allclose(np.asarray(x.grad), 2 * g1)

@@ -1,0 +1,63 @@
+"""Loop-aware HLO analyzer: trip-count multiplication, dot FLOPs,
+collective byte accounting on a synthetic module."""
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+SYNTH = """
+HloModule synth
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %a = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+%sum (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %w2 = f32[16,32]{1,0} constant({...})
+  %d0 = f32[8,32]{1,0} dot(%arg, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %arg)
+  %loop = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_trip_count_multiplies_body_costs():
+    r = analyze_hlo(SYNTH)
+    # entry dot: 2*8*32*16 = 8192 ; body dot: 2*8*16*16 = 4096, x10 = 40960
+    assert r["dot_flops"] == 8192 + 10 * 4096
+    # body all-reduce: 8*16*4 bytes * 2 (ring) * 10 trips
+    assert r["collective_bytes"]["all-reduce"] == 8 * 16 * 4 * 2 * 10
+    assert r["collective_counts"]["all-reduce"] == 10
+    assert r["n_loops"] >= 1   # counts looped call edges (cond + body)
+
+
+def test_no_collectives_counts_zero():
+    r = analyze_hlo("""
+HloModule t
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  ROOT %d = f32[4,4]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+""")
+    assert r["dot_flops"] == 2 * 4 * 4 * 4
+    assert r["collective_total_bytes"] == 0

@@ -1,0 +1,253 @@
+"""Per-architecture smoke tests (reduced configs, one fwd/train step on
+CPU, shape + NaN assertions) and model-substrate invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, get_config
+from repro.models import build_model, tree_params_count
+
+
+def _batch_for(cfg, key, b=2, s=32):
+    if cfg.family == "encdec":
+        return {"frames": jax.random.normal(key, (b, s // 2, cfg.d_model)),
+                "tokens": jnp.zeros((b, s // 2), jnp.int32),
+                "labels": jnp.ones((b, s // 2), jnp.int32)}
+    if cfg.family == "vlm":
+        txt = s - cfg.num_image_tokens
+        return {"tokens": jnp.zeros((b, txt), jnp.int32),
+                "labels": jnp.ones((b, txt), jnp.int32),
+                "image_embeds": jax.random.normal(
+                    key, (b, cfg.num_image_tokens, cfg.d_model))}
+    return {"tokens": jnp.zeros((b, s), jnp.int32),
+            "labels": jnp.ones((b, s), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Instantiate the reduced config of the same family; one forward +
+    one grad step; assert output shapes and no NaNs."""
+    key = jax.random.PRNGKey(0)
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch_for(cfg, key)
+    loss, metrics = model.loss_fn(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves), arch
+    # logits shape
+    if cfg.family == "encdec":
+        logits = model.forward(params, batch)
+        assert logits.shape == (2, 16, cfg.vocab_size)
+    elif cfg.family == "vlm":
+        logits, _, _ = model.forward(params, batch["tokens"],
+                                     image_embeds=batch["image_embeds"])
+        assert logits.shape[-1] == cfg.vocab_size
+    else:
+        logits, _, _ = model.forward(params, batch["tokens"])
+        assert logits.shape == (2, 32, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_decode_matches_teacher_forcing(arch):
+    """prefill + decode_step logits == full-forward last-token logits."""
+    key = jax.random.PRNGKey(1)
+    cfg = get_config(arch, reduced=True, moe_impl="dense")
+    model = build_model(cfg)
+    params = model.init(key)
+    b, s, maxs = 2, 12, 24
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(key, (b, 8, cfg.d_model))
+        ref = model.forward(params, {"frames": frames, "tokens": toks})[:, -1]
+        _, cache = model.prefill(params, frames, toks[:, :-1], max_seq=maxs)
+        out, _ = model.decode_step(params, cache, toks[:, -1:],
+                                   jnp.int32(s - 1))
+    elif cfg.family == "vlm":
+        img = jax.random.normal(key, (b, cfg.num_image_tokens, cfg.d_model))
+        ref = model.forward(params, toks, image_embeds=img)[0][:, -1]
+        _, cache = model.prefill(params, toks[:, :-1],
+                                 max_seq=maxs + cfg.num_image_tokens,
+                                 image_embeds=img)
+        out, _ = model.decode_step(params, cache, toks[:, -1:],
+                                   jnp.int32(cfg.num_image_tokens + s - 1))
+    else:
+        ref = model.forward(params, toks)[0][:, -1]
+        _, cache = model.prefill(params, toks[:, :-1], max_seq=maxs)
+        out, _ = model.decode_step(params, cache, toks[:, -1:],
+                                   jnp.int32(s - 1))
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(out) / scale,
+                               np.asarray(ref) / scale, atol=2e-3)
+
+
+def test_moe_scatter_matches_dense_oracle():
+    """With generous capacity, scatter dispatch == dense (no drops)."""
+    from repro.models.moe import apply_moe
+
+    cfg = get_config("deepseek-v2-lite-16b", reduced=True)
+    cfg_scatter = cfg.with_(moe_impl="scatter")
+    cfg_dense = cfg.with_(moe_impl="dense")
+    m = cfg.moe.__class__(**{**cfg.moe.__dict__, "capacity_factor": 8.0})
+    cfg_scatter = cfg_scatter.with_(moe=m)
+    cfg_dense = cfg_dense.with_(moe=m)
+
+    from repro.models.moe import moe_meta
+    from repro.models.meta import tree_init
+
+    p = tree_init(moe_meta(cfg_scatter), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    out_s, aux_s = apply_moe(p, x, cfg_scatter)
+    out_d, aux_d = apply_moe(p, x, cfg_dense)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(aux_s), float(aux_d), rtol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor=1.0 some tokens drop but output stays finite
+    and aux loss pushes toward balance."""
+    from repro.models.meta import tree_init
+    from repro.models.moe import apply_moe, moe_meta
+
+    cfg = get_config("deepseek-v2-lite-16b", reduced=True)
+    m = cfg.moe.__class__(**{**cfg.moe.__dict__, "capacity_factor": 1.0})
+    cfg = cfg.with_(moe=m, moe_impl="scatter")
+    p = tree_init(moe_meta(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model))
+    out, aux = apply_moe(p, x, cfg)
+    assert bool(jnp.isfinite(out).all())
+    assert float(aux) > 0
+
+
+def test_mla_absorbed_decode_equals_expanded():
+    """MLA decode (latent cache + absorbed matmuls) == expanded attention."""
+    cfg = get_config("deepseek-v3-671b", reduced=True, moe_impl="dense")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0,
+                              cfg.vocab_size)
+    ref = model.forward(params, toks)[0][:, -1]
+    _, cache = model.prefill(params, toks[:, :-1], max_seq=16)
+    out, _ = model.decode_step(params, cache, toks[:, -1:], jnp.int32(8))
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(out) / scale,
+                               np.asarray(ref) / scale, atol=2e-3)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Decode past the window: ring buffer must equal full-cache windowed
+    attention."""
+    cfg = get_config("gemma3-27b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, total = 1, 40            # window is 16 in the reduced config
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, total), 0,
+                              cfg.vocab_size)
+    ref = model.forward(params, toks)[0][:, -1]
+    _, cache = model.prefill(params, toks[:, :-1], max_seq=total + 8)
+    out, _ = model.decode_step(params, cache, toks[:, -1:],
+                               jnp.int32(total - 1))
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(out) / scale,
+                               np.asarray(ref) / scale, atol=2e-3)
+
+
+def test_blockwise_attention_equals_ref():
+    cfg = get_config("starcoder2-7b", reduced=True)
+    model_ref = build_model(cfg.with_(attention_impl="ref"))
+    model_blk = build_model(cfg.with_(attention_impl="blockwise"))
+    params = model_ref.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                              cfg.vocab_size)
+    ref = model_ref.forward(params, toks)[0]
+    blk = model_blk.forward(params, toks)[0]
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_chunked_ce_equals_dense():
+    cfg = get_config("codeqwen1.5-7b", reduced=True)
+    model_d = build_model(cfg.with_(ce_impl="dense"))
+    model_c = build_model(cfg.with_(ce_impl="chunked"))
+    params = model_d.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    ld, _ = model_d.loss_fn(params, batch)
+    lc, _ = model_c.loss_fn(params, batch)
+    np.testing.assert_allclose(float(ld), float(lc), rtol=1e-5)
+
+
+def test_scan_vs_unrolled_layers_identical():
+    cfg = get_config("granite-34b", reduced=True)
+    m_scan = build_model(cfg.with_(scan_layers=True))
+    m_unroll = build_model(cfg.with_(scan_layers=False))
+    params_scan = m_scan.init(jax.random.PRNGKey(0))
+    # rearrange stacked params into unrolled structure
+    structs_unroll = m_unroll.abstract_params()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    out_scan = m_scan.forward(params_scan, toks)[0]
+
+    def unstack(tree, n):
+        return [jax.tree.map(lambda a: a[i], tree) for i in range(n)]
+
+    stages = params_scan["stages"]
+    unrolled_stages = []
+    for s_params, stage in zip(stages, m_unroll.stages):
+        layers = unstack(s_params, stage.repeats)
+        unrolled_stages.append({f"r{i}": layers[i]
+                                for i in range(stage.repeats)})
+    params_unroll = dict(params_scan, stages=unrolled_stages)
+    out_unroll = m_unroll.forward(params_unroll, toks)[0]
+    np.testing.assert_allclose(np.asarray(out_scan), np.asarray(out_unroll),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_param_counts_full_configs():
+    """Full-config parameter counts are in the advertised ballpark
+    (via metas only — no allocation)."""
+    expect = {"deepseek_v3_671b": (600e9, 760e9),
+              "deepseek_v2_lite_16b": (14e9, 18e9),
+              "gemma3_27b": (24e9, 30e9),
+              "starcoder2_7b": (6e9, 8.5e9),
+              "granite_34b": (30e9, 38e9),
+              "codeqwen15_7b": (6e9, 8.5e9),
+              "mamba2_370m": (0.3e9, 0.45e9),
+              "jamba_v01_52b": (45e9, 58e9),
+              "whisper_medium": (0.6e9, 0.9e9),  # 24+24 layers, ~769M real
+              "paligemma_3b": (2e9, 3.5e9)}
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        n = tree_params_count(model.abstract_params())
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}," \
+                              f" {hi/1e9}]B"
+
+
+def test_fp8_kv_cache_decode_quality():
+    """fp8 cache: top-1 agreement with bf16-cache decode on the reduced
+    config (random weights = worst case for quantization noise)."""
+    cfg_b = get_config("granite-34b", reduced=True)
+    cfg_8 = cfg_b.with_(cache_dtype="fp8")
+    mb, m8 = build_model(cfg_b), build_model(cfg_8)
+    params = mb.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
+                              cfg_b.vocab_size)
+    _, cb = mb.prefill(params, toks[:, :-1], max_seq=16)
+    _, c8 = m8.prefill(params, toks[:, :-1], max_seq=16)
+    lb, _ = mb.decode_step(params, cb, toks[:, -1:], jnp.int32(11))
+    l8, _ = m8.decode_step(params, c8, toks[:, -1:], jnp.int32(11))
+    cos = float((lb * l8).sum()
+                / (jnp.linalg.norm(lb) * jnp.linalg.norm(l8)))
+    assert cos > 0.98, cos
+    assert bool((jnp.argmax(lb, -1) == jnp.argmax(l8, -1)).all())
+    # fp8 cache really is fp8
+    assert any(leaf.dtype == jnp.float8_e4m3fn
+               for leaf in jax.tree.leaves(c8))

@@ -1,0 +1,124 @@
+"""Tensor interface: dispatch, lazy/fusing backend, pallas backend,
+op-surface size (paper Table 1 metric), hypothesis lazy==eager property."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory import telemetry
+from repro.core.tensor import (TensorBackend, available_backends,
+                               current_backend, get_backend, ops,
+                               use_backend)
+
+
+def test_primitive_op_surface_is_small():
+    """Paper Table 1: Flashlight's operator surface is ~60 ops."""
+    n = len(TensorBackend.primitive_ops())
+    assert 40 <= n <= 80, n
+
+
+def test_exactly_one_add_one_conv_one_sum():
+    """Paper Table 1's 'approx num. ops that perform ADD/CONV/SUM = 1'."""
+    prims = TensorBackend.primitive_ops()
+    assert prims.count("add") == 1
+    assert sum(1 for p in prims if p.startswith("conv")) == 1
+    assert prims.count("sum") == 1
+
+
+def test_default_backend_and_registry():
+    assert current_backend().name == "jnp"
+    assert {"jnp", "lazy", "pallas"} <= set(available_backends())
+    with pytest.raises(KeyError):
+        get_backend("no-such-backend")
+
+
+def test_derived_ops_compose_from_primitives():
+    x = jnp.asarray([-1.0, 0.0, 2.0])
+    np.testing.assert_allclose(np.asarray(ops.relu(x)), [0, 0, 2])
+    np.testing.assert_allclose(np.asarray(ops.sigmoid(x)),
+                               1 / (1 + np.exp([1.0, 0.0, -2.0])), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ops.softmax(x)),
+                               np.exp([-1, 0, 2]) / np.exp([-1, 0, 2]).sum(),
+                               rtol=1e-6)
+    oh = ops.one_hot(jnp.asarray([0, 2]), 3)
+    np.testing.assert_allclose(np.asarray(oh), [[1, 0, 0], [0, 0, 1]])
+
+
+_ELEM = ["exp", "tanh", "abs", "neg", "sqrt_abs", "add_self", "mul_self"]
+
+
+def _apply(name, x):
+    if name == "sqrt_abs":
+        return ops.sqrt(ops.abs(x))
+    if name == "add_self":
+        return ops.add(x, x)
+    if name == "mul_self":
+        return ops.mul(x, x)
+    return getattr(ops, name)(x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(chain=st.lists(st.sampled_from(_ELEM), min_size=1, max_size=6),
+       seed=st.integers(0, 50))
+def test_lazy_backend_matches_eager(chain, seed):
+    """Property: deferred+fused evaluation == eager for random chains."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 8))
+    eager = x
+    for name in chain:
+        eager = _apply(name, eager)
+    with use_backend("lazy"):
+        lazy = x
+        for name in chain:
+            lazy = _apply(name, lazy)
+        out = ops.materialize(lazy)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eager),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lazy_defers_until_materialize_and_fuses():
+    with use_backend("lazy") as lb:
+        before = lb.materialize_calls
+        a = ops.full((16, 16), 2.0)
+        b = ops.tanh(ops.add(ops.mul(a, a), a))
+        assert b.value is None          # nothing computed yet
+        out = ops.materialize(b)
+        assert lb.materialize_calls == before + 1
+    np.testing.assert_allclose(np.asarray(out), np.tanh(6.0) * np.ones((16, 16)),
+                               rtol=1e-6)
+
+
+def test_lazy_emits_alloc_telemetry():
+    with use_backend("lazy"):
+        trace = telemetry.start_recording()
+        a = ops.full((32, 32), 1.0)
+        b = ops.exp(ops.mul(a, a))
+        ops.materialize(b)
+        t = telemetry.stop_recording()
+    allocs = [e for e in t.events if e.kind == "alloc"]
+    assert len(allocs) >= 3
+    assert any(e.tag == "exp" for e in allocs)
+    assert all(e.nbytes == 32 * 32 * 4 for e in allocs)
+
+
+def test_lazy_matmul_and_reduction():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    y = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    with use_backend("lazy"):
+        out = ops.materialize(ops.sum(ops.matmul(x, y), axis=0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray((x @ y).sum(0)),
+                               rtol=1e-5)
+
+
+def test_pallas_backend_matmul_swap_and_fallback():
+    x32 = jnp.ones((128, 128), jnp.float32)
+    odd = jnp.ones((100, 100), jnp.float32)
+    with use_backend("pallas") as pb:
+        k0, f0 = pb.kernel_calls, pb.fallback_calls
+        r = ops.matmul(x32, x32)
+        assert pb.kernel_calls == k0 + 1
+        r2 = ops.matmul(odd, odd)          # unaligned -> fallback
+        assert pb.fallback_calls == f0 + 1
+    np.testing.assert_allclose(np.asarray(r), 128.0 * np.ones((128, 128)))
+    np.testing.assert_allclose(np.asarray(r2), 100.0 * np.ones((100, 100)))
