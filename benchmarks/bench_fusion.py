@@ -12,7 +12,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.tensor import get_backend, ops, use_backend
+import repro
+from repro.core.tensor import ops
 
 
 def _chain(x, n):
@@ -36,9 +37,9 @@ def run() -> list[tuple[str, float, str]]:
     jax.block_until_ready(out)
     t_eager = (time.perf_counter() - t0) / 20
 
-    # lazy: one materialization per chain
-    lb = get_backend("lazy")
-    with use_backend("lazy"):
+    # lazy: one materialization per chain, via a session-scoped swap
+    with repro.session(backend="lazy", tag="bench_fusion") as sess:
+        lb = sess.backend_instance()
         out = ops.materialize(_chain(x, n))
         n0, m0 = lb.nodes_built, lb.materialize_calls
         t0 = time.perf_counter()

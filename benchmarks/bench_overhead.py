@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.core import autograd as ag
 from repro.core import nn
 from repro.core.autograd import functions as F
@@ -197,8 +198,16 @@ def make_transformer_pair(key, b=4, s=64, d=64, heads=4, layers=2,
 
 
 def run() -> list[tuple[str, float, str]]:
+    # benchmark provenance: the whole comparison runs under one session
+    # whose describe() snapshot names the configuration being measured
+    with repro.session(backend="jnp", tag="bench_overhead") as sess:
+        rows = _run(key=jax.random.PRNGKey(0))
+    rows.append(("overhead_session", 0.0, str(sess.describe())))
+    return rows
+
+
+def _run(key) -> list[tuple[str, float, str]]:
     rows = []
-    key = jax.random.PRNGKey(0)
 
     # CNN family
     tape_step, raw_step, (w, x, y) = make_cnn_pair(key)

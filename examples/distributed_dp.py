@@ -14,16 +14,27 @@ import sys
 
 def _worker():
     import jax
+
+    import repro
+    from repro.core.distributed import ShardMapBackend, init_distributed
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    dist = init_distributed(ShardMapBackend("data"))
+
+    with repro.session(mesh=mesh, batch_axes=("data",),
+                       tag="distributed_dp"):
+        _train(mesh, dist)
+
+
+def _train(mesh, dist):
+    import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
-    from repro.core.distributed import (GradientSynchronizer, GradSyncConfig,
-                                        ShardMapBackend, init_distributed)
-
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    dist = init_distributed(ShardMapBackend("data"))
+    from repro.core.compat import shard_map
+    from repro.core.distributed import GradientSynchronizer, GradSyncConfig
 
     d, classes = 32, 4
     k = jax.random.PRNGKey(0)
@@ -51,7 +62,7 @@ def _worker():
             return new_p, ef, jax.lax.pmean(loss, "data")
 
         ef0 = sync.init_state(params)
-        sharded_step = jax.jit(jax.shard_map(
+        sharded_step = jax.jit(shard_map(
             step, mesh=mesh,
             in_specs=(P(), jax.tree.map(lambda _: P(), ef0), P("data"),
                       P("data")),

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.core import nn, optim
 from repro.core.autograd import Variable, noGrad
 from repro.core.data import BatchDataset, TensorDataset
@@ -41,6 +42,13 @@ def eval_loop(model, dataset):
 
 
 def main():
+    # the session is the one knob for the whole run; "jnp" is the default
+    # backend — swap it (e.g. "lazy") and the entire loop follows
+    with repro.session(backend="jnp", tag="quickstart"):
+        _run()
+
+
+def _run():
     image_dim, classes, batch_size = 12, 10, 64
     xs, ys = load_dataset()
     val_x, val_y = xs[:256], ys[:256]

@@ -8,17 +8,25 @@ import time
 
 import jax
 
+import repro
 from repro.configs.base import get_config
 from repro.models import build_model
 from repro.serving.engine import Request, ServeEngine
 
 
 def main():
-    cfg = get_config("gemma3-27b", reduced=True)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, batch_slots=4, max_seq=64)
+    # one session = the whole serving scenario (backend, precision,
+    # kernel overrides); the engine snapshots it for provenance
+    with repro.session(tag="serve_lm:gemma3-27b-reduced") as sess:
+        cfg = get_config("gemma3-27b", reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(model, params, batch_slots=4, max_seq=64)
+        print(f"[serve_lm] session: {engine.session.describe()}")
+        return _drive(engine)
 
+
+def _drive(engine):
     prompts = [[3, 1, 4, 1, 5], [9, 2, 6], [5, 3, 5, 8, 9, 7],
                [2, 7, 1, 8], [2, 8, 1], [8, 2, 8, 4]]
     for uid, p in enumerate(prompts):

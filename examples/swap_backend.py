@@ -2,10 +2,14 @@
 ENTIRE stack — core layers, tape autograd, and the production model zoo —
 picks up the new implementation with zero call-site changes.
 
-Three swaps:
+The swap rides the unified runtime Session (``repro.session``), the one
+composable context for backend + mesh + kernel overrides + precision:
+
  1. an instrumented backend that counts every add/matmul,
  2. the deferred/fusing backend (ArrayFire-JIT analog),
- 3. the Pallas-kernel backend (hand-written MXU matmul kernel).
+ 3. the Pallas-kernel backend (hand-written MXU matmul kernel),
+ 4. a kernel-level override: inject just a custom matmul — no backend
+    subclass needed — via ``session(kernels={"matmul": fn})``.
 
 Run:  PYTHONPATH=src python examples/swap_backend.py
 """
@@ -13,9 +17,9 @@ Run:  PYTHONPATH=src python examples/swap_backend.py
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.configs.base import get_config
-from repro.core.tensor import (JnpBackend, ops, register_backend,
-                               use_backend)
+from repro.core.tensor import JnpBackend, ops, register_backend
 from repro.models import build_model
 
 
@@ -52,13 +56,17 @@ def main():
 
     # 1. instrumented swap: every dispatch in a 16B-class MoE+MLA model
     #    (reduced) flows through the custom backend
-    with use_backend("counting") as cb:
+    with repro.session(backend="counting", tag="instrumented") as sess:
+        cb = sess.backend_instance()
         logits, _, _ = model.forward(params, toks)
+        print("[swap 1] session:", sess.describe()["backend"],
+              "tag:", sess.describe()["tag"])
     print("[swap 1] counting backend saw:", dict(sorted(cb.counts.items())))
     assert cb.counts.get("dot_general", 0) > 10
 
     # 2. deferred/fusing backend under the core API
-    with use_backend("lazy") as lb:
+    with repro.session(backend="lazy") as sess:
+        lb = sess.backend_instance()
         x = ops.full((64, 64), 1.3)
         y = ops.tanh(ops.add(ops.mul(x, x), x))
         val = ops.materialize(y)
@@ -68,12 +76,27 @@ def main():
 
     # 3. Pallas-kernel backend: matmuls now run the hand-written MXU
     #    kernel (interpret mode on CPU)
-    with use_backend("pallas") as pb:
+    with repro.session(backend="pallas") as sess:
+        pb = sess.backend_instance()
         a = jnp.ones((128, 128), jnp.float32)
         out = ops.matmul(a, a)
         print(f"[swap 3] pallas backend: {pb.kernel_calls} kernel call(s), "
               f"result[0,0]={float(out[0,0])}")
     assert float(out[0, 0]) == 128.0
+
+    # 4. finer-grained than a backend: override ONE kernel for a scope
+    calls = []
+
+    def traced_matmul(lhs, rhs):
+        calls.append((lhs.shape, rhs.shape))
+        return jnp.matmul(lhs, rhs)
+
+    with repro.session(kernels={"matmul": traced_matmul}):
+        a = jnp.ones((32, 32))
+        ops.matmul(a, a)
+    print(f"[swap 4] kernel override intercepted {len(calls)} matmul(s): "
+          f"{calls}")
+    assert calls == [((32, 32), (32, 32))]
     print("swap_backend OK")
 
 

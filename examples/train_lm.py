@@ -14,6 +14,7 @@ import tempfile
 
 import numpy as np
 
+import repro
 from repro.configs.base import get_config
 from repro.launch.train import make_batches
 from repro.models import build_model, tree_params_count
@@ -44,19 +45,20 @@ def main():
     args = ap.parse_args()
 
     arch, reduced, batch, seq, overrides = PRESETS[args.preset]
-    cfg = get_config(arch, reduced=reduced, **overrides)
-    model = build_model(cfg)
-    n = tree_params_count(model.abstract_params())
-    print(f"[train_lm] preset={args.preset} params={n/1e6:.1f}M "
-          f"batch={batch} seq={seq} steps={args.steps}")
+    with repro.session(tag=f"train_lm:{args.preset}"):
+        cfg = get_config(arch, reduced=reduced, **overrides)
+        model = build_model(cfg)
+        n = tree_params_count(model.abstract_params())
+        print(f"[train_lm] preset={args.preset} params={n/1e6:.1f}M "
+              f"batch={batch} seq={seq} steps={args.steps}")
 
-    params = model.init(jax.random.PRNGKey(0))
-    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_")
-    tcfg = TrainConfig(steps=args.steps, base_lr=3e-3,
-                       warmup=max(5, args.steps // 20),
-                       checkpoint_dir=ckpt_dir, checkpoint_every=100)
-    batches = make_batches(cfg, batch, seq, args.steps)
-    params, history = train(model, params, batches, tcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_")
+        tcfg = TrainConfig(steps=args.steps, base_lr=3e-3,
+                           warmup=max(5, args.steps // 20),
+                           checkpoint_dir=ckpt_dir, checkpoint_every=100)
+        batches = make_batches(cfg, batch, seq, args.steps)
+        params, history = train(model, params, batches, tcfg)
     first = np.mean([h["loss"] for h in history[:10]])
     last = np.mean([h["loss"] for h in history[-10:]])
     tput = batch * seq / np.median([h["sec"] for h in history[5:]])

@@ -1,4 +1,18 @@
 """repro: Flashlight (ICML 2022) in JAX — open tensor/memory/distributed
-interfaces, tape autograd, and a multi-pod production substrate."""
+interfaces, tape autograd, and a multi-pod production substrate.
 
-__version__ = "0.1.0"
+Top-level API: the unified runtime Session —
+
+    with repro.session(backend="pallas", mesh=mesh) as s:
+        ...
+"""
+
+from repro.runtime import (KernelOverrides, PrecisionPolicy, Session,
+                           current_session, default_session, session)
+
+__all__ = [
+    "Session", "KernelOverrides", "PrecisionPolicy",
+    "session", "current_session", "default_session",
+]
+
+__version__ = "0.2.0"

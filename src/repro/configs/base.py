@@ -163,9 +163,26 @@ def get_config(arch: str, reduced: bool = False, **overrides) -> ModelConfig:
     mod_name = _ALIAS.get(arch, arch)
     mod = importlib.import_module(f"repro.configs.{mod_name}")
     cfg = mod.reduced_config() if reduced else mod.config()
+    cfg = _apply_session_precision(cfg)
     if overrides:
         cfg = cfg.with_(**overrides)
     return cfg
+
+
+def _apply_session_precision(cfg: "ModelConfig") -> "ModelConfig":
+    """Session-level precision policy beats the arch default (explicit
+    ``get_config(..., compute_dtype=...)`` overrides still beat both)."""
+    from repro.runtime import current_session, resolve_dtype
+
+    pol = current_session().precision
+    changes: dict = {}
+    if pol.param_dtype is not None:
+        changes["param_dtype"] = resolve_dtype(pol.param_dtype)
+    if pol.compute_dtype is not None:
+        changes["compute_dtype"] = resolve_dtype(pol.compute_dtype)
+    if pol.cache_dtype is not None:
+        changes["cache_dtype"] = pol.cache_dtype
+    return cfg.with_(**changes) if changes else cfg
 
 
 def list_archs() -> list[str]:

@@ -1,0 +1,31 @@
+"""Small jax version-compat shims.
+
+The container pins whatever jax the image baked in; these helpers let the
+same source run on the explicit-sharding era API (``jax.shard_map``,
+``check_vma``) and on older releases (``jax.experimental.shard_map``,
+``check_rep``) without sprinkling try/except at call sites.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` when present, else the experimental spelling."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict: newer jax returns the
+    dict directly, pre-0.6 returns a per-device list of dicts."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    return cost

@@ -128,7 +128,9 @@ class ShardMapBackend(DistributedInterface):
         return jax.lax.axis_index(self.axis_name)
 
     def getWorldSize(self):
-        return jax.lax.axis_size(self.axis_name)
+        if hasattr(jax.lax, "axis_size"):
+            return jax.lax.axis_size(self.axis_name)
+        return jax.lax.psum(1, self.axis_name)  # pre-0.6 jax
 
     def allReduce(self, x, scale: float = 1.0, async_op: bool = False):
         def run(v):

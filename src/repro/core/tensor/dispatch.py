@@ -5,30 +5,26 @@ implementation of the add function ... All add operations in Flashlight
 dispatch to that operator, so existing baselines and operations will run
 with the new implementation without any additional code changes."
 
-``use_backend`` swaps the active backend for a scope; everything layered on
-:mod:`repro.core.tensor.ops` — the core NN stack *and* the production model
-zoo — picks up the swap with zero call-site changes.
+The *registry* (name -> backend factory) lives here; the *active* backend
+is a field of the unified :class:`repro.runtime.Session` and scoped swaps
+go through ``repro.session(backend=...)``.  The historical entry points
+``use_backend`` / ``set_backend`` remain as deprecated shims over the
+session stack so pre-Session code keeps working unchanged.
 """
 
 from __future__ import annotations
 
 import contextlib
-import threading
+import warnings
 from typing import Callable
+
+from repro.runtime import stack as _rt
 
 from .backend import TensorBackend
 from .jnp_backend import JnpBackend
 
 _REGISTRY: dict[str, Callable[[], TensorBackend]] = {}
 _INSTANCES: dict[str, TensorBackend] = {}
-
-
-class _State(threading.local):
-    def __init__(self):
-        self.backend: TensorBackend | None = None
-
-
-_STATE = _State()
 
 
 def register_backend(name: str, factory: Callable[[], TensorBackend]) -> None:
@@ -49,26 +45,31 @@ def get_backend(name: str) -> TensorBackend:
 
 
 def current_backend() -> TensorBackend:
-    if _STATE.backend is None:
-        _STATE.backend = get_backend("jnp")
-    return _STATE.backend
+    """The session's backend — what every ``ops.*`` primitive dispatches to."""
+    return _rt.current_session().backend_instance()
 
 
 def set_backend(backend: TensorBackend | str) -> None:
-    if isinstance(backend, str):
-        backend = get_backend(backend)
-    _STATE.backend = backend
+    """Deprecated: use ``repro.session(backend=...)`` for scoped swaps."""
+    warnings.warn(
+        "set_backend() is deprecated; use repro.session(backend=...) "
+        "(or Session.replace) instead", DeprecationWarning, stacklevel=2)
+    _rt.mutate_current(backend=backend)
 
 
 @contextlib.contextmanager
 def use_backend(backend: TensorBackend | str):
-    """Scoped backend swap — the paper's headline customization point."""
-    prev = _STATE.backend
-    set_backend(backend)
-    try:
+    """Deprecated shim for the paper's headline customization point.
+
+    Equivalent to ``with repro.session(backend=backend): ...`` — the swap
+    still reaches every dispatch call site; it simply rides the unified
+    session stack now.
+    """
+    warnings.warn(
+        "use_backend() is deprecated; use repro.session(backend=...) "
+        "instead", DeprecationWarning, stacklevel=3)
+    with _rt.session(backend=backend):
         yield current_backend()
-    finally:
-        _STATE.backend = prev
 
 
 register_backend("jnp", JnpBackend)

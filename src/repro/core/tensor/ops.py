@@ -13,6 +13,8 @@ from functools import partial
 
 import jax.numpy as jnp
 
+from repro.runtime import current_session
+
 from .dispatch import current_backend
 
 # --------------------------------------------------------------------------
@@ -95,7 +97,15 @@ gt = _binary("gt")
 ge = _binary("ge")
 logical_and = _binary("logical_and")
 logical_or = _binary("logical_or")
-matmul = _binary("matmul")
+
+
+def matmul(lhs, rhs):
+    """Session kernel-override point: ``session(kernels={"matmul": fn})``
+    injects a custom contraction ahead of backend dispatch."""
+    fn = current_session().kernels.matmul
+    if fn is not None:
+        return fn(lhs, rhs)
+    return current_backend().matmul(lhs, rhs)
 
 
 def sum(x, axis=None, keepdims=False):  # noqa: A001

@@ -30,11 +30,11 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.configs.base import ARCHS, SHAPES, cells, get_config
 from repro.launch.mesh import make_production_mesh, mesh_chips
 from repro.launch.steps import BASELINE, CellPlan, Variant
 from repro.models.meta import is_meta
-from repro.sharding.context import active_mesh
 
 ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
@@ -181,8 +181,12 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         plan = CellPlan(cfg, shape, mesh, variant)
         fn, args, in_sh, out_sh, donate = plan.lowerable()
         t0 = time.time()
-        with active_mesh(mesh,
-                         batch_axes=plan.rules.mesh_axes_for("batch")):
+        with repro.session(mesh=mesh,
+                           batch_axes=plan.rules.mesh_axes_for("batch"),
+                           sharding_rules=plan.rules,
+                           tag=f"dryrun:{arch}/{shape_name}/{variant.name}"
+                           ) as sess:
+            rec["session"] = sess.describe()
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=donate)
             lowered = jitted.lower(*args)
@@ -197,7 +201,9 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
                       "temp_size_in_bytes", "generated_code_size_in_bytes",
                       "alias_size_in_bytes")
             if hasattr(mem, k)}
-        cost = compiled.cost_analysis() or {}
+        from repro.core.compat import cost_analysis
+
+        cost = cost_analysis(compiled)
         rec["cost"] = {k: float(v) for k, v in cost.items()
                        if isinstance(v, (int, float))
                        and k in ("flops", "bytes accessed",

@@ -15,13 +15,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs.base import get_config
 from repro.core.data import (BatchDataset, PackedLMDataset, PrefetchDataset,
                              ShuffleDataset, synthetic_corpus)
 from repro.core.optim import AdamW
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import build_model
-from repro.sharding.context import active_mesh
 from repro.sharding.rules import make_rules
 from repro.training.train_loop import TrainConfig, train
 
@@ -92,7 +92,8 @@ def main():
                        checkpoint_dir=args.ckpt,
                        warmup=max(2, args.steps // 20))
     batches = make_batches(cfg, args.batch, args.seq, args.steps)
-    with active_mesh(mesh):
+    with repro.session(mesh=mesh, sharding_rules=rules,
+                       tag=f"train:{cfg.name}"):
         params, history = train(model, params, batches, tcfg,
                                 optimizer=AdamW(lr=args.lr))
     first = np.mean([h["loss"] for h in history[:5]])

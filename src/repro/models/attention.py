@@ -22,6 +22,12 @@ from .meta import ParamMeta
 NEG_INF = -2.0 ** 30  # finite: keeps fully-masked rows NaN-free
 
 
+def _session_kernels():
+    from repro.runtime import current_session
+
+    return current_session().kernels
+
+
 # ===========================================================================
 # masks
 # ===========================================================================
@@ -114,7 +120,12 @@ def gqa_attention(p, x, cfg, *, positions, window: int = 0,
     b, s, _ = x.shape
     q, k, v = _qkv(p, x, cfg, positions)
     scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
-    if cfg.attention_impl == "pallas" and jax.default_backend() == "tpu":
+    override = _session_kernels().attention
+    if override is not None:
+        out = override(q, k, v, positions=positions, causal=causal,
+                       window=window, prefix_len=prefix_len, scale=scale,
+                       cap=cfg.logit_softcap)
+    elif cfg.attention_impl == "pallas" and jax.default_backend() == "tpu":
         from repro.kernels import ops as kops
 
         out = kops.flash_attention(q, k, v, causal=causal, window=window,
@@ -179,15 +190,52 @@ def _write_prefill_cache(k, v, cfg, window, max_seq):
             "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
 
 
+def _decode_positions(pos, b):
+    """Normalize decode position(s): scalar -> (rope positions [1],
+    per_slot=False); per-slot [B] array -> ([B, 1], per_slot=True)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return pos, jnp.full((1,), pos, jnp.int32), False
+    if pos.ndim != 1 or pos.shape[0] != b:
+        raise ValueError(f"pos must be scalar or [batch]; got {pos.shape}")
+    return pos, pos[:, None], True
+
+
+def _batched_cache_update(cache, new, slot):
+    """Write ``new`` [B, 1, ...] at a per-batch position ``slot`` [B]."""
+    def upd(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s,) + (0,) * (c.ndim - 1))
+
+    return jax.vmap(upd)(cache, new, slot)
+
+
+def decode_valid_mask(pos, s_cache, window: int = 0):
+    """Causal validity over cache slots: [S] for scalar ``pos``, [B, S]
+    for a per-slot position vector.  Once a ring buffer has wrapped
+    (``pos + 1 >= s_cache``) every slot holds a live entry."""
+    idx = jnp.arange(s_cache)
+    if jnp.ndim(pos) == 1:
+        idx, pos = idx[None, :], pos[:, None]
+    mask = idx <= pos
+    if window > 0:
+        mask = mask | (pos + 1 >= s_cache)
+    return mask
+
+
 def gqa_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
-    """One decode step. x: [B, 1, D]; pos: scalar current position.
+    """One decode step. x: [B, 1, D]; pos: scalar position shared by the
+    whole batch, or a [B] int vector of *per-slot* positions (continuous
+    batching admits requests mid-flight, so slots decode at different
+    depths).
 
     ``attend_fn(q, k, v, valid)`` lets the serving layer substitute a
-    sequence-sharded flash-decoding implementation.
+    sequence-sharded flash-decoding implementation; when omitted, the
+    session's ``kernels.decode_attention`` override applies (ring-buffer
+    window caches stay local and always use plain cache attention).
     """
     b = x.shape[0]
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    pos_arr = jnp.full((1,), pos, jnp.int32)
+    pos, pos_arr, per_slot = _decode_positions(pos, b)
     q = linear(x, p["wq"]).reshape(b, 1, h, hd)
     k = linear(x, p["wk"]).reshape(b, 1, kv, hd)
     v = linear(x, p["wv"]).reshape(b, 1, kv, hd)
@@ -197,16 +245,18 @@ def gqa_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
     v = v.astype(cache["v"].dtype)
     s_cache = cache["k"].shape[1]
     slot = jnp.mod(pos, s_cache) if window > 0 else pos
-    new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-    idx = jnp.arange(s_cache)
-    if window > 0:
-        valid = jnp.where(pos + 1 >= s_cache, jnp.ones_like(idx, bool),
-                          idx <= pos)
+    if per_slot:
+        new_k = _batched_cache_update(cache["k"], k, slot)
+        new_v = _batched_cache_update(cache["v"], v, slot)
     else:
-        valid = idx <= pos
+        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    valid = decode_valid_mask(pos, s_cache, window)
     scale = 1.0 / math.sqrt(hd)
-    attend = attend_fn or plain_cache_attention
+    attend = attend_fn
+    if attend is None and window == 0:
+        attend = _session_kernels().decode_attention
+    attend = attend or plain_cache_attention
     out = attend(q, new_k, new_v, valid, scale=scale,
                  cap=cfg.logit_softcap)
     out = linear(out.reshape(b, 1, -1), p["wo"])
@@ -220,7 +270,8 @@ def gqa_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
 def partial_cache_attention(q, k, v, valid, *, scale, cap: float = 0.0):
     """Partial softmax stats for flash-decoding combine.
 
-    q: [B, H, Dk]; k: [B, S, Kv, Dk]; v: [B, S, Kv, Dv]; valid: [S] bool.
+    q: [B, H, Dk]; k: [B, S, Kv, Dk]; v: [B, S, Kv, Dv]; valid: [S] bool
+    (shared across the batch) or [B, S] (per-slot decode depths).
     Caches may be stored quantized (fp8) — math upcasts to q's dtype.
     Returns m: [B, Kv, G], l: [B, Kv, G], o: [B, Kv, G, Dv].
     """
@@ -230,13 +281,14 @@ def partial_cache_attention(q, k, v, valid, *, scale, cap: float = 0.0):
     qg = q.reshape(b, kvh, g, dk)
     k = k.astype(q.dtype)
     v = v.astype(q.dtype)
+    vmask = (valid if valid.ndim == 2 else valid[None])[:, None, None, :]
     scores = jnp.einsum("bkgd,bskd->bkgs", qg, k,
                         preferred_element_type=jnp.float32) * scale
     scores = softcap(scores, cap)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(vmask, scores, NEG_INF)
     m = jnp.max(scores, axis=-1)                                 # [B,Kv,G]
     e = jnp.exp(scores - m[..., None])
-    e = jnp.where(valid[None, None, None, :], e, 0.0)
+    e = jnp.where(vmask, e, 0.0)
     l = jnp.sum(e, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", e.astype(v.dtype), v).astype(
         jnp.float32)
@@ -366,15 +418,20 @@ def mla_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
-    pos_arr = jnp.full((1,), pos, jnp.int32)
+    pos, pos_arr, per_slot = _decode_positions(pos, b)
     q_nope, q_rope = _mla_q(p, x, cfg, pos_arr)
     q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]              # [B,H,*]
     c_kv_new, k_rope_new = _mla_kv_latent(p, x, cfg, pos_arr)
     c_kv_new = c_kv_new.astype(cache["c_kv"].dtype)
     k_rope_new = k_rope_new.astype(cache["k_rope"].dtype)
-    new_c = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
-    new_r = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new,
-                                         (0, pos, 0))
+    if per_slot:
+        new_c = _batched_cache_update(cache["c_kv"], c_kv_new, pos)
+        new_r = _batched_cache_update(cache["k_rope"], k_rope_new, pos)
+    else:
+        new_c = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new,
+                                             (0, pos, 0))
+        new_r = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new,
+                                             (0, pos, 0))
     # absorb W_uk into q
     wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
     w_uk = wkv_b[..., : m.qk_nope_dim]                        # [C,H,N]
@@ -384,9 +441,10 @@ def mla_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
     kv_cat = jnp.concatenate([new_c, new_r], -1)[:, :, None, :]  # [B,S,1,C+R]
     vals = new_c[:, :, None, :]                               # [B,S,1,C]
     s_cache = new_c.shape[1]
-    valid = jnp.arange(s_cache) <= pos
+    valid = decode_valid_mask(pos, s_cache)
     scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    attend = attend_fn or plain_cache_attention
+    attend = (attend_fn or _session_kernels().decode_attention
+              or plain_cache_attention)
     o_c = attend(q_cat, kv_cat, vals, valid, scale=scale)     # [B,H,C]
     o = jnp.einsum("bhc,chv->bhv", o_c.astype(jnp.float32),
                    w_uv.astype(jnp.float32)).astype(x.dtype)
@@ -427,6 +485,7 @@ def cross_decode(p, x, enc_kv, cfg, attend_fn=None):
     q = linear(x, p["wq"]).reshape(b, h, hd)
     k, v = enc_kv["k"], enc_kv["v"]
     valid = jnp.ones((k.shape[1],), bool)
-    attend = attend_fn or plain_cache_attention
+    attend = (attend_fn or _session_kernels().decode_attention
+              or plain_cache_attention)
     out = attend(q, k, v, valid, scale=1.0 / math.sqrt(hd))
     return linear(out.reshape(b, 1, -1), p["wo"])

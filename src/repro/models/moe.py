@@ -217,7 +217,9 @@ def _moe_a2a(p, x2d, m, cfg, mesh, token_axes, expert_axis="model"):
 
     from jax.sharding import PartitionSpec as P
 
-    out, aux = jax.shard_map(
+    from repro.core.compat import shard_map
+
+    out, aux = shard_map(
         body, mesh=mesh,
         in_specs=(P(tok_spec, None), P(None, None),
                   P(expert_axis, None, None), P(expert_axis, None, None),
@@ -229,7 +231,7 @@ def _moe_a2a(p, x2d, m, cfg, mesh, token_axes, expert_axis="model"):
 
 
 def _a2a_available(m, cfg, x2d):
-    from repro.sharding.context import get_active_mesh, _STATE
+    from repro.sharding.context import get_active_mesh, get_batch_axes
 
     mesh = get_active_mesh()
     if mesh is None or "model" not in mesh.axis_names:
@@ -239,7 +241,7 @@ def _a2a_available(m, cfg, x2d):
         return None
     # tokens stay sharded over ALL batch axes (incl. the expert axis: EP
     # exchanges between token shards; excluding it would replicate routing)
-    token_axes = [a for a in _STATE.batch_axes if a in mesh.axis_names]
+    token_axes = [a for a in get_batch_axes() if a in mesh.axis_names]
     total = 1
     for a in token_axes:
         total *= mesh.shape[a]

@@ -169,7 +169,8 @@ class LM:
         return logits, caches
 
     def decode_step(self, p, cache, token, pos, *, attend_fn=None):
-        """token: [B, 1] int; pos: scalar int32. Returns ([B, V], cache)."""
+        """token: [B, 1] int; pos: scalar int32 or per-slot [B] int32.
+        Returns ([B, V], cache)."""
         cfg = self.cfg
         x = embed(p["embed"], token, cfg)
         new_caches = []

@@ -1,0 +1,23 @@
+"""repro.runtime — the unified Session API.
+
+One composable, nestable, thread-local context carrying every scoped
+customization point: tensor backend, mesh + sharding rules + batch axes,
+kernel overrides, precision policy, and memory manager.
+
+    import repro
+
+    with repro.session(backend="lazy", tag="fusion-study") as s:
+        ...                       # everything dispatches through s
+        print(s.describe())       # serializable provenance snapshot
+"""
+
+from .policies import KernelOverrides, PrecisionPolicy, resolve_dtype
+from .session import Session
+from .stack import (current_session, default_session, mutate_current,
+                    pop_session, push_session, session)
+
+__all__ = [
+    "Session", "KernelOverrides", "PrecisionPolicy", "resolve_dtype",
+    "session", "current_session", "default_session",
+    "push_session", "pop_session", "mutate_current",
+]

@@ -1,0 +1,95 @@
+"""Kernel-override and precision policies carried by a :class:`Session`.
+
+Both are small frozen dataclasses so sessions stay hashable-by-identity,
+cheap to ``replace``, and serializable through ``describe()`` for logs and
+benchmark provenance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, fields
+from typing import Any, Callable
+
+
+def _callable_name(fn: Callable | None) -> str | None:
+    if fn is None:
+        return None
+    name = getattr(fn, "__qualname__", None) or getattr(fn, "__name__", None)
+    if name is None:
+        name = type(fn).__name__
+    mod = getattr(fn, "__module__", None)
+    return f"{mod}.{name}" if mod else name
+
+
+@dataclass(frozen=True)
+class KernelOverrides:
+    """Injectable kernels — the paper's §5 customization points as data.
+
+    attention:
+        full-sequence attention, ``fn(q, k, v, *, positions, causal,
+        window, prefix_len, scale, cap) -> [B, S, H, Dv]``; replaces the
+        config-selected implementation in :func:`gqa_attention`.
+    decode_attention:
+        cache attention for one decode step, ``fn(q, k, v, valid, *,
+        scale, cap) -> [B, H, Dv]`` — the former ``attend_fn`` kwarg that
+        used to be hand-threaded through ``ServeEngine`` and the model
+        zoo (e.g. :func:`make_flash_decode_attend`).
+    matmul:
+        2-D contraction ``fn(lhs, rhs)``; consulted by ``ops.matmul``
+        before backend dispatch (inject a Pallas tile without writing a
+        whole backend).
+    """
+
+    attention: Callable | None = None
+    decode_attention: Callable | None = None
+    matmul: Callable | None = None
+
+    def replace(self, **kw) -> "KernelOverrides":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> dict[str, str | None]:
+        return {f.name: _callable_name(getattr(self, f.name))
+                for f in fields(self)}
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """Session-level dtype overrides applied when a model config is built.
+
+    ``None`` leaves the architecture config's own choice in place.
+    Strings keep the policy serializable; ``resolve_dtype`` maps them to
+    jnp dtypes at the point of use.  ``cache_dtype`` follows the config
+    convention: ``"compute"`` or ``"fp8"``.
+    """
+
+    param_dtype: str | None = None
+    compute_dtype: str | None = None
+    cache_dtype: str | None = None
+
+    def replace(self, **kw) -> "PrecisionPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> dict[str, str | None]:
+        return {"param_dtype": self.param_dtype,
+                "compute_dtype": self.compute_dtype,
+                "cache_dtype": self.cache_dtype}
+
+
+_DTYPE_ALIASES = {
+    "f32": "float32", "fp32": "float32", "float32": "float32",
+    "f16": "float16", "fp16": "float16", "float16": "float16",
+    "bf16": "bfloat16", "bfloat16": "bfloat16",
+}
+
+
+def resolve_dtype(name: str) -> Any:
+    """Map a policy dtype string to the jnp dtype object."""
+    import jax.numpy as jnp
+
+    try:
+        return getattr(jnp, _DTYPE_ALIASES[name.lower()])
+    except KeyError:
+        raise ValueError(
+            f"unknown precision dtype {name!r}; "
+            f"known: {sorted(set(_DTYPE_ALIASES))}") from None

@@ -1,0 +1,128 @@
+"""The :class:`Session`: one composable context for the whole stack.
+
+Flashlight's thesis (paper §4–§5) is that framework internals are open,
+modular customization points.  Previously each point lived in its own
+thread-local or kwarg: the tensor backend in ``core/tensor/dispatch.py``,
+the mesh in ``sharding/context.py``, decode-attention overrides threaded
+by hand as ``attend_fn``.  A Session bundles all of them into a single
+value that can be entered for a scope (``repro.session(...)``), derived
+(``Session.replace(...)``), inspected (``repro.current_session()``) and
+snapshotted (``Session.describe()``) — so "the configuration this step
+ran under" is one object, not an archaeology exercise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+from .policies import KernelOverrides, PrecisionPolicy
+
+# Default mesh-axis candidates for the activation batch dimension; matches
+# the historical sharding/context.py default.
+DEFAULT_BATCH_AXES: tuple[str, ...] = ("pod", "data")
+
+
+@dataclass(frozen=True)
+class Session:
+    """Immutable bundle of every scoped customization point.
+
+    backend:
+        tensor backend — a registry name (``"jnp"``, ``"lazy"``,
+        ``"pallas"``, anything registered via ``register_backend``) or a
+        ``TensorBackend`` instance.  Resolved lazily by
+        :meth:`backend_instance` so constructing a Session never imports
+        heavyweight backends.
+    mesh / batch_axes:
+        the active ``jax.sharding.Mesh`` (or None) and the mesh-axis
+        candidates activations re-pin their batch dim to.
+    sharding_rules:
+        the rules object (``sharding.rules.make_rules(...)``) the mesh
+        was planned with; carried for provenance and so layers can reach
+        rule-derived facts without replumbing.
+    kernels / precision:
+        see :class:`KernelOverrides` / :class:`PrecisionPolicy`.
+    memory:
+        a ``MemoryManagerAdapter`` (host-side pool / trace-replay policy
+        under study) or None.
+    tag:
+        free-form label that lands in ``describe()`` — name the scenario.
+    """
+
+    backend: Any = "jnp"
+    mesh: Any = None
+    batch_axes: tuple[str, ...] = DEFAULT_BATCH_AXES
+    sharding_rules: Any = None
+    kernels: KernelOverrides = field(default_factory=KernelOverrides)
+    precision: PrecisionPolicy = field(default_factory=PrecisionPolicy)
+    memory: Any = None
+    tag: str = ""
+
+    def __post_init__(self):
+        if self.batch_axes is not None:
+            object.__setattr__(self, "batch_axes", tuple(self.batch_axes))
+        for name, cls in (("kernels", KernelOverrides),
+                          ("precision", PrecisionPolicy)):
+            val = getattr(self, name)
+            if isinstance(val, dict):
+                object.__setattr__(self, name, cls(**val))
+
+    # -- derivation ---------------------------------------------------------
+    def replace(self, **overrides) -> "Session":
+        """A derived session; nested fields accept dicts of overrides:
+        ``s.replace(kernels={"matmul": fn})`` keeps the other kernels."""
+        for name in ("kernels", "precision"):
+            val = overrides.get(name)
+            if isinstance(val, dict):
+                overrides[name] = getattr(self, name).replace(**val)
+        return dataclasses.replace(self, **overrides)
+
+    # -- resolution ---------------------------------------------------------
+    def backend_instance(self):
+        """The live TensorBackend (registry names resolved on demand).
+
+        Memoized per Session: this sits on the eager dispatch hot path
+        (every ``ops.*`` primitive), so after the first resolution it is
+        one dict lookup.  The import stays local — dispatch imports the
+        runtime at module level, so the reverse edge must be lazy.
+        """
+        inst = self.__dict__.get("_backend_inst")
+        if inst is None:
+            b = self.backend
+            if isinstance(b, str):
+                from repro.core.tensor.dispatch import get_backend
+
+                b = get_backend(b)
+            inst = b
+            object.__setattr__(self, "_backend_inst", inst)
+        return inst
+
+    # -- provenance ---------------------------------------------------------
+    def describe(self) -> dict:
+        """JSON-serializable snapshot for logs and benchmark provenance."""
+        b = self.backend
+        backend = b if isinstance(b, str) else getattr(
+            b, "name", type(b).__name__)
+        mesh = None
+        if self.mesh is not None:
+            mesh = {"axes": {k: int(v)
+                             for k, v in dict(self.mesh.shape).items()},
+                    "devices": int(self.mesh.devices.size)}
+        rules = self.sharding_rules
+        if rules is not None:
+            rules = getattr(rules, "name", None) or type(rules).__name__
+        memory = None
+        if self.memory is not None:
+            memory = {"manager": type(self.memory).__name__,
+                      "capacity": int(getattr(self.memory, "capacity", 0))}
+        return {
+            "backend": backend,
+            "mesh": mesh,
+            "batch_axes": list(self.batch_axes or ()),
+            "sharding_rules": rules,
+            "kernels": self.kernels.describe(),
+            "precision": self.precision.describe(),
+            "memory": memory,
+            "tag": self.tag,
+        }

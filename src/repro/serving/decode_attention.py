@@ -28,7 +28,11 @@ def make_flash_decode_attend(mesh: Mesh, *, seq_axes: Sequence[str],
 
     q: [B, H, Dk] (replicated over seq_axes);
     k: [B, S, Kv, Dk]; v: [B, S, Kv, Dv] (S sharded over seq_axes);
-    valid: [S] bool (sharded like S).
+    valid: [S] bool (sharded like S), or [B, S] when slots decode at
+    per-slot positions (continuous batching).
+
+    Suitable as a session-level override:
+    ``repro.session(kernels={"decode_attention": attend_fn})``.
     """
     seq_axes = tuple(seq_axes)
     batch_axes = tuple(batch_axes)
@@ -47,12 +51,15 @@ def make_flash_decode_attend(mesh: Mesh, *, seq_axes: Sequence[str],
             b, kvh, g, dv = out.shape
             return out.reshape(b, kvh * g, dv).astype(q_l.dtype)
 
-        return jax.shard_map(
+        from repro.core.compat import shard_map
+
+        valid_spec = P(bspec, sspec) if valid.ndim == 2 else P(sspec)
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P(bspec, None, None),
                       P(bspec, sspec, None, None),
                       P(bspec, sspec, None, None),
-                      P(sspec)),
+                      valid_spec),
             out_specs=P(bspec, None, None),
             check_vma=False,
         )(q, k, v, valid)

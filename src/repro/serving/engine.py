@@ -2,19 +2,29 @@
 
 Requests join a waiting queue; free cache slots are assigned per step
 (static shapes — TPU-friendly), prefill runs per-request, then all active
-slots advance one token per ``decode`` call.  Finished slots (EOS or
-max-tokens) are returned and recycled.  This is the serving counterpart of
-the train loop and the driver behind examples/serve_lm.py.
+slots advance one token per ``decode`` call at their *own* position
+(slots admitted mid-flight decode at different depths).  Finished slots
+(EOS or max-tokens) are returned and recycled.  This is the serving
+counterpart of the train loop and the driver behind examples/serve_lm.py.
+
+The engine reads its scoped configuration from the unified runtime
+Session: construct it inside ``repro.session(kernels={"decode_attention":
+...}, ...)`` to swap the cache-attention kernel (e.g. flash-decoding over
+a sequence-sharded cache); the session is snapshotted at construction so
+``engine.session.describe()`` records the serving scenario's provenance.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime import current_session
+from repro.runtime import stack as _rt
 
 
 @dataclass
@@ -34,7 +44,13 @@ class ServeEngine:
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
-        self.attend_fn = attend_fn
+        self.session = current_session()
+        if attend_fn is not None:
+            warnings.warn(
+                "ServeEngine(attend_fn=...) is deprecated; construct the "
+                "engine inside repro.session(kernels={'decode_attention': "
+                "fn}) instead", DeprecationWarning, stacklevel=2)
+        self.attend_fn = attend_fn or self.session.kernels.decode_attention
         self._decode = jax.jit(self._decode_fn)
         self.waiting: list[Request] = []
         self.active: dict[int, Request] = {}     # slot -> request
@@ -44,8 +60,12 @@ class ServeEngine:
         self.steps = 0
 
     def _decode_fn(self, params, cache, tok, pos):
-        logits, cache = self.model.decode_step(params, cache, tok, pos,
-                                               attend_fn=self.attend_fn)
+        # pin the construction-time session during tracing: whatever is
+        # ambient when jit first traces must not leak into the compiled
+        # decode (describe() provenance has to match actual behavior)
+        with _rt.session(self.session):
+            logits, cache = self.model.decode_step(
+                params, cache, tok, pos, attend_fn=self.attend_fn)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok[:, None], cache
 
@@ -62,12 +82,20 @@ class ServeEngine:
             self.active[slot] = req
 
     def _prefill_into_slot(self, slot: int, req: Request) -> None:
-        # per-request prefill: feed prompt tokens through decode steps
-        # (simple and slot-local; bulk prefill is a batch-level fast path)
+        # Per-request prefill: feed prompt tokens through decode steps.
+        # Other slots are fed their own current (token, position), so their
+        # cache writes land where the next decode step would write the
+        # identical values — idempotent for position-addressed attention
+        # caches.  (SSM-state layers advance their recurrence on every
+        # call, so staggered admission needs a batch-level bulk prefill
+        # for SSM families — same limitation as before.)
         for i, tok in enumerate(req.prompt[:-1]):
-            t = jnp.full((self.slots, 1), 0, jnp.int32).at[slot, 0].set(tok)
-            _, self.cache = self._decode(self.params, self.cache, t,
-                                         jnp.int32(i))
+            t = self.slot_tok.copy()
+            t[slot, 0] = tok
+            p = self.slot_pos.copy()
+            p[slot] = i
+            _, self.cache = self._decode(self.params, self.cache,
+                                         jnp.asarray(t), jnp.asarray(p))
         self.slot_pos[slot] = len(req.prompt) - 1
         self.slot_tok[slot, 0] = req.prompt[-1]
 
@@ -77,10 +105,10 @@ class ServeEngine:
         self._admit()
         if not self.active:
             return []
-        pos = int(self.slot_pos.max())
         tok = jnp.asarray(self.slot_tok)
+        pos = jnp.asarray(self.slot_pos)                 # per-slot positions
         next_tok, self.cache = self._decode(self.params, self.cache, tok,
-                                            jnp.int32(pos))
+                                            pos)
         next_np = np.asarray(next_tok)
         finished = []
         for slot, req in list(self.active.items()):

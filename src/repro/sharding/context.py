@@ -1,32 +1,31 @@
 """Ambient mesh context for in-model sharding constraints.
 
-Model code is mesh-agnostic; launchers install the active mesh here and
-layers may then pin intermediate activations (e.g. MoE dispatch buffers)
-with :func:`constrain`.  With no active mesh (unit tests, single-device
+Model code is mesh-agnostic; launchers install the active mesh via
+``repro.session(mesh=..., batch_axes=...)`` and layers may then pin
+intermediate activations (e.g. MoE dispatch buffers) with
+:func:`constrain`.  With no active mesh (unit tests, single-device
 examples) every call is a no-op.
+
+The mesh lives on the unified :class:`repro.runtime.Session`; the
+historical ``active_mesh`` context manager remains as a deprecated shim
+over the session stack.
 """
 
 from __future__ import annotations
 
-import threading
+import warnings
 from typing import Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-
-class _State(threading.local):
-    def __init__(self):
-        self.mesh: Mesh | None = None
-        self.batch_axes: tuple = ("pod", "data")
-
-
-_STATE = _State()
+from repro.runtime import stack as _rt
 
 
 class active_mesh:
-    """Context manager: ``with active_mesh(mesh, batch_axes=...): ...``
+    """Deprecated shim: ``with active_mesh(mesh, batch_axes=...): ...``
 
+    Equivalent to ``repro.session(mesh=mesh, batch_axes=...)``.
     ``batch_axes`` is the rule-derived mesh-axis set for the activation
     batch dimension — blocks re-pin activations to it at layer boundaries
     (GSPMD can drop batch sharding through masked attention einsums in the
@@ -38,19 +37,27 @@ class active_mesh:
         self.batch_axes = tuple(batch_axes) if batch_axes else None
 
     def __enter__(self):
-        self._prev = (_STATE.mesh, _STATE.batch_axes)
-        _STATE.mesh = self.mesh
+        warnings.warn(
+            "active_mesh() is deprecated; use repro.session(mesh=..., "
+            "batch_axes=...) instead", DeprecationWarning, stacklevel=2)
+        overrides: dict = {"mesh": self.mesh}
         if self.batch_axes is not None:
-            _STATE.batch_axes = self.batch_axes
+            overrides["batch_axes"] = self.batch_axes
+        _rt.push_session(_rt.current_session().replace(**overrides))
         return self.mesh
 
     def __exit__(self, *exc):
-        _STATE.mesh, _STATE.batch_axes = self._prev
+        _rt.pop_session()
         return False
 
 
 def get_active_mesh() -> Mesh | None:
-    return _STATE.mesh
+    return _rt.current_session().mesh
+
+
+def get_batch_axes() -> tuple:
+    """Mesh-axis candidates for the activation batch dimension."""
+    return _rt.current_session().batch_axes
 
 
 def constrain_batch(x) -> "jax.Array":
@@ -62,9 +69,10 @@ def constrain_batch(x) -> "jax.Array":
     seq-sharded activation makes GSPMD gather K/V per layer (§Perf log);
     proper SP needs a ring-attention shard_map, left as future work.
     """
-    if _STATE.mesh is None:
+    sess = _rt.current_session()
+    if sess.mesh is None:
         return x
-    return constrain(x, (_STATE.batch_axes,) + (None,) * (x.ndim - 1))
+    return constrain(x, (sess.batch_axes,) + (None,) * (x.ndim - 1))
 
 
 def _resolve_axes(mesh, size: int, a) -> tuple[list, set]:
@@ -89,7 +97,7 @@ def constrain(x, axes: Sequence) -> jax.Array:
     trailing candidate axes until the product divides (same policy as the
     rules engine).
     """
-    mesh = _STATE.mesh
+    mesh = _rt.current_session().mesh
     if mesh is None:
         return x
     parts = []

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.optim import AdamW, clip_by_global_norm, cosine_schedule
+from repro.runtime import current_session
 from repro.training.checkpoint import CheckpointManager
 from repro.training.fault_tolerance import StragglerMonitor
 
@@ -74,7 +75,14 @@ def make_step_fn(model, optimizer, tcfg: TrainConfig):
 def train(model, params, batches: Iterator[Any], tcfg: TrainConfig,
           optimizer=None, jit_kwargs: dict | None = None,
           log_fn: Callable[[str], None] = print):
-    """Returns (params, history). Resumes from checkpoint_dir if present."""
+    """Returns (params, history). Resumes from checkpoint_dir if present.
+
+    Runs under the ambient runtime Session (mesh, backend, kernels …);
+    its ``describe()`` snapshot is logged once for provenance so a
+    history can always be tied back to the configuration it ran under.
+    """
+    sess = current_session()
+    log_fn(f"[train] session {sess.describe()}")
     optimizer = optimizer or AdamW(lr=tcfg.base_lr)
     opt_state = optimizer.init(params)
     start_step = 0

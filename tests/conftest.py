@@ -1,0 +1,163 @@
+"""Test-suite bootstrap: degrade gracefully when ``hypothesis`` is absent.
+
+Six test modules use hypothesis property tests.  CI images without the
+``test`` extra used to fail *collection* for all of them, silently skipping
+~60 unrelated tests.  When hypothesis is not importable we install a tiny
+stand-in module that runs each ``@given`` test as a small deterministic
+fixed-example sweep: far weaker than real property testing (no shrinking,
+no random exploration — install ``.[test]`` for that), but every module
+collects and the properties still get exercised on representative points.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+REPO_ROOT = str(pathlib.Path(__file__).resolve().parents[1])
+
+
+def subproc_env():
+    """Environment for tests that re-exec python with fake jax devices.
+
+    Inherit the full environment (a stripped env can stall jax device
+    init on some hosts); just point the child at the src layout.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+try:  # the real thing wins whenever it is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import types
+
+    _N_EXAMPLES = 5  # fixed examples per @given test
+
+    class _Strategy:
+        """A deterministic example generator standing in for a strategy."""
+
+        def __init__(self, gen):
+            # gen: index -> example; indexes 0.._N_EXAMPLES-1 are drawn
+            self.gen = gen
+
+        def example_at(self, i: int):
+            return self.gen(i)
+
+    def _integers(min_value=0, max_value=100, **kw):
+        lo = kw.get("min_value", min_value)
+        hi = kw.get("max_value", max_value)
+        span = max(hi - lo, 0)
+        picks = sorted({lo, hi, lo + span // 2, lo + span // 3,
+                        lo + (2 * span) // 3})
+        return _Strategy(lambda i: picks[i % len(picks)])
+
+    def _floats(min_value=0.0, max_value=1.0, **kw):
+        lo = kw.get("min_value", min_value)
+        hi = kw.get("max_value", max_value)
+        fracs = (0.0, 1.0, 0.5, 0.25, 0.75)
+        return _Strategy(lambda i: lo + (hi - lo) * fracs[i % len(fracs)])
+
+    def _booleans():
+        return _Strategy(lambda i: i % 2 == 0)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda i: seq[i % len(seq)])
+
+    def _lists(elem, min_size=0, max_size=10, **_):
+        def gen(i):
+            # vary length across the sweep, elements via the child strategy
+            size = min_size + (i * 2 + 1) % (max_size - min_size + 1)
+            return [elem.example_at(i + j * 7 + 3) for j in range(size)]
+
+        return _Strategy(gen)
+
+    def _tuples(*strats):
+        return _Strategy(
+            lambda i: tuple(s.example_at(i + 11 * j)
+                            for j, s in enumerate(strats)))
+
+    def _just(value):
+        return _Strategy(lambda i: value)
+
+    def _one_of(*strats):
+        flat = list(strats[0]) if (len(strats) == 1
+                                   and isinstance(strats[0], (list, tuple))
+                                   ) else list(strats)
+        return _Strategy(lambda i: flat[i % len(flat)].example_at(i))
+
+    def given(*pos_strats, **kw_strats):
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                for i in range(_N_EXAMPLES):
+                    pos = tuple(s.example_at(i) for s in pos_strats)
+                    kws = {k: s.example_at(i)
+                           for k, s in kw_strats.items()}
+                    try:
+                        fn(*args, *pos, **kws, **kwargs)
+                    except UnsatisfiedAssumption:
+                        continue  # assume() failed: discard this example
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # pytest must not inject fixtures for strategy-bound kwargs
+            wrapper.__signature__ = _strip_signature(fn, pos_strats,
+                                                     kw_strats)
+            return wrapper
+
+        return decorate
+
+    def _strip_signature(fn, pos_strats, kw_strats):
+        import inspect
+
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        drop = set(kw_strats)
+        if pos_strats:  # positional strategies bind to the leading params
+            drop |= {p.name for p in params[:len(pos_strats)]}
+        return sig.replace(
+            parameters=[p for p in params if p.name not in drop])
+
+    def settings(*_a, **_kw):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    def assume(condition):
+        if not condition:
+            raise _stub.UnsatisfiedAssumption()
+        return True
+
+    _stub = types.ModuleType("hypothesis")
+    _stub.given = given
+    _stub.settings = settings
+    _stub.assume = assume
+    _stub.note = lambda *_a, **_k: None
+    _stub.HealthCheck = types.SimpleNamespace(
+        too_slow="too_slow", data_too_large="data_too_large",
+        filter_too_much="filter_too_much")
+
+    class UnsatisfiedAssumption(Exception):
+        pass
+
+    _stub.UnsatisfiedAssumption = UnsatisfiedAssumption
+    _stub.__repro_stub__ = True
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
+    _st.lists = _lists
+    _st.tuples = _tuples
+    _st.just = _just
+    _st.one_of = _one_of
+    _stub.strategies = _st
+
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _st

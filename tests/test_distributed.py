@@ -60,6 +60,8 @@ def test_no_compression_is_identity_on_loopback():
         np.asarray(x), np.asarray(y)), g, out)
 
 
+from conftest import REPO_ROOT as _REPO_ROOT, subproc_env as _subproc_env
+
 _SUBPROC_COLLECTIVES = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -67,8 +69,8 @@ _SUBPROC_COLLECTIVES = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.distributed import ShardMapBackend
 
-    mesh = jax.make_mesh((8,), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
     d = ShardMapBackend("data")
     x = jnp.arange(8.0)
 
@@ -78,10 +80,11 @@ _SUBPROC_COLLECTIVES = textwrap.dedent("""
                 d.allGather(local),
                 d.reduceScatter(d.allGather(local)))
 
-    out = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                        out_specs=(P("data"), P(("data",), None) if False
-                                   else P("data"), P("data")),
-                        check_vma=False)(x)
+    from repro.core.compat import shard_map
+    out = shard_map(body, mesh=mesh, in_specs=P("data"),
+                    out_specs=(P("data"), P(("data",), None) if False
+                               else P("data"), P("data")),
+                    check_vma=False)(x)
     ar, ag, rs = out
     res = {
       "ar": np.asarray(ar).tolist(),
@@ -94,8 +97,8 @@ _SUBPROC_COLLECTIVES = textwrap.dedent("""
 def test_shard_map_backend_collectives_8dev():
     r = subprocess.run([sys.executable, "-c", _SUBPROC_COLLECTIVES],
                        capture_output=True, text=True,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
+                       env=_subproc_env(), timeout=300,
+                       cwd=_REPO_ROOT)
     assert r.returncode == 0, r.stderr[-2000:]
     res = json.loads(r.stdout.strip().splitlines()[-1])
     # allReduce(mean): every element = mean(0..7) = 3.5
@@ -110,8 +113,8 @@ _SUBPROC_PIPELINE = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np, json
     from repro.training.pipeline import pipeline_apply
 
-    mesh = jax.make_mesh((4,), ("stage",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("stage",))
     n_stages, n_micro, mb, d = 4, 8, 2, 16
     ks = jax.random.split(jax.random.PRNGKey(0), n_stages)
     Ws = jnp.stack([jax.random.normal(k, (d, d)) * 0.3 for k in ks])
@@ -133,8 +136,8 @@ _SUBPROC_PIPELINE = textwrap.dedent("""
 def test_pipeline_parallel_equals_sequential_4dev():
     r = subprocess.run([sys.executable, "-c", _SUBPROC_PIPELINE],
                        capture_output=True, text=True,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
+                       env=_subproc_env(), timeout=300,
+                       cwd=_REPO_ROOT)
     assert r.returncode == 0, r.stderr[-2000:]
     err = json.loads(r.stdout.strip().splitlines()[-1])["err"]
     assert err < 1e-5, err

@@ -1,0 +1,191 @@
+"""The unified runtime Session: stack semantics, thread isolation,
+back-compat shims, provenance snapshots, and kernel/precision overrides."""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.tensor import current_backend, ops, set_backend, use_backend
+from repro.runtime import KernelOverrides, PrecisionPolicy, Session
+
+
+# -- stack semantics ---------------------------------------------------------
+
+def test_default_session_is_jnp_no_mesh():
+    s = repro.current_session()
+    assert s.backend == "jnp"
+    assert s.mesh is None
+    assert s.backend_instance().name == "jnp"
+
+
+def test_nesting_composes_and_restores():
+    with repro.session(backend="lazy") as outer:
+        assert current_backend().name == "lazy"
+        with repro.session(tag="inner") as inner:
+            # overrides derive from the *current* session: backend kept
+            assert inner.backend == "lazy"
+            assert inner.tag == "inner"
+        assert repro.current_session() is outer
+    assert current_backend().name == "jnp"
+
+
+def test_restore_on_exception():
+    before = repro.current_session()
+    with pytest.raises(RuntimeError, match="boom"):
+        with repro.session(backend="lazy"):
+            assert current_backend().name == "lazy"
+            raise RuntimeError("boom")
+    assert repro.current_session() is before
+    assert current_backend().name == "jnp"
+
+
+def test_enter_explicit_session_verbatim():
+    s = Session(backend="lazy", tag="explicit")
+    with repro.session(s) as active:
+        assert active is s
+        assert current_backend().name == "lazy"
+    with pytest.raises(TypeError):
+        with repro.session("lazy"):
+            pass
+
+
+def test_replace_accepts_nested_dicts():
+    s = Session()
+    s2 = s.replace(kernels={"matmul": np.matmul},
+                   precision={"compute_dtype": "bf16"})
+    assert s2.kernels.matmul is np.matmul
+    assert s2.kernels.decode_attention is None     # others preserved
+    assert s2.precision.compute_dtype == "bf16"
+    assert s.kernels.matmul is None                # original untouched
+
+
+def test_thread_isolation():
+    seen = {}
+
+    def worker():
+        # a session entered on the main thread must not leak here
+        seen["backend"] = repro.current_session().backend
+        with repro.session(backend="lazy"):
+            seen["scoped"] = repro.current_session().backend
+
+    with repro.session(backend="pallas"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        assert repro.current_session().backend == "pallas"
+    assert seen["backend"] == "jnp"
+    assert seen["scoped"] == "lazy"
+
+
+# -- back-compat shims -------------------------------------------------------
+
+def test_use_backend_shim_warns_and_swaps():
+    with pytest.deprecated_call():
+        with use_backend("lazy") as b:
+            assert b.name == "lazy"
+            assert current_backend().name == "lazy"
+            assert repro.current_session().backend == "lazy"
+    assert current_backend().name == "jnp"
+
+
+def test_set_backend_shim_scoped_by_session():
+    with repro.session():
+        with pytest.deprecated_call():
+            set_backend("lazy")
+        assert current_backend().name == "lazy"
+    # the imperative mutation died with its enclosing scope
+    assert current_backend().name == "jnp"
+
+
+def test_active_mesh_shim_warns_and_installs():
+    from repro.launch.mesh import make_mesh
+    from repro.sharding.context import active_mesh, get_active_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    with pytest.deprecated_call():
+        with active_mesh(mesh, batch_axes=("data",)):
+            assert get_active_mesh() is mesh
+            assert repro.current_session().mesh is mesh
+            assert repro.current_session().batch_axes == ("data",)
+    assert get_active_mesh() is None
+
+
+# -- provenance --------------------------------------------------------------
+
+def test_describe_round_trip():
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    s = Session(backend="pallas", mesh=mesh, batch_axes=("data",),
+                kernels=KernelOverrides(matmul=np.matmul),
+                precision=PrecisionPolicy(compute_dtype="bf16"),
+                tag="prov")
+    d = s.describe()
+    assert json.loads(json.dumps(d)) == d
+    assert d["backend"] == "pallas"
+    assert d["mesh"] == {"axes": {"data": 1}, "devices": 1}
+    assert d["kernels"]["matmul"].endswith("matmul")  # ufunc: no __module__
+    assert d["precision"]["compute_dtype"] == "bf16"
+    assert d["tag"] == "prov"
+
+
+# -- override consumption ----------------------------------------------------
+
+def test_matmul_kernel_override_scoped():
+    calls = []
+
+    def spy(lhs, rhs):
+        calls.append(lhs.shape)
+        return jnp.matmul(lhs, rhs)
+
+    a = jnp.ones((4, 4))
+    with repro.session(kernels={"matmul": spy}):
+        out = ops.matmul(a, a)
+    assert calls == [(4, 4)]
+    np.testing.assert_allclose(np.asarray(out), 4.0 * np.ones((4, 4)))
+    ops.matmul(a, a)
+    assert len(calls) == 1  # override gone with the scope
+
+
+def test_precision_policy_applies_to_get_config():
+    from repro.configs.base import get_config
+
+    with repro.session(precision={"compute_dtype": "f32",
+                                  "cache_dtype": "fp8"}):
+        cfg = get_config("codeqwen1.5-7b", reduced=True)
+    assert cfg.compute_dtype == jnp.float32
+    assert cfg.cache_dtype == "fp8"
+    # explicit get_config overrides still beat the policy
+    with repro.session(precision={"cache_dtype": "fp8"}):
+        cfg = get_config("codeqwen1.5-7b", reduced=True,
+                         cache_dtype="compute")
+    assert cfg.cache_dtype == "compute"
+    # and no leakage outside the scope
+    assert get_config("codeqwen1.5-7b", reduced=True).cache_dtype == "compute"
+
+
+def test_decode_attention_override_reaches_model_decode():
+    from repro.configs.base import get_config
+    from repro.models import build_model
+    from repro.models.attention import plain_cache_attention
+
+    cfg = get_config("codeqwen1.5-7b", reduced=True, n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(1, 8)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    hits = []
+
+    def attend(q, k, v, valid, *, scale, cap=0.0):
+        hits.append(q.shape)
+        return plain_cache_attention(q, k, v, valid, scale=scale, cap=cap)
+
+    with repro.session(kernels={"decode_attention": attend}):
+        model.decode_step(params, cache, tok, jnp.int32(0))
+    assert hits, "session decode_attention override was not consulted"

@@ -1,0 +1,120 @@
+"""ServeEngine decode positions: slots admitted mid-flight must decode at
+their own position, not the batch max (regression for the shared-`pos`
+bug), and the engine must source kernel overrides from the Session."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.serving.engine import Request, ServeEngine
+
+
+def _tiny_model():
+    cfg = get_config("codeqwen1.5-7b", reduced=True, n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _decode_alone(model, params, prompt, max_new=8, max_seq=32):
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=max_seq)
+    eng.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=max_new))
+    (done,) = eng.run_until_done()
+    return done.generated
+
+
+def test_staggered_admissions_decode_at_per_slot_positions():
+    """3 requests with different prompt lengths through 2 slots — the
+    third is admitted mid-flight once a slot frees.  Greedy decoding must
+    match each request decoded alone; with the old shared
+    ``pos = slot_pos.max()`` the staggered slots attend at wrong depths
+    and diverge."""
+    model, params = _tiny_model()
+    prompts = [[3, 1, 4, 1, 5], [9, 2], [5, 3, 5, 8, 9, 7, 2]]
+    ref = {uid: _decode_alone(model, params, p)
+           for uid, p in enumerate(prompts)}
+
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=32)
+    eng.submit(Request(uid=0, prompt=list(prompts[0]), max_new_tokens=8))
+    eng.submit(Request(uid=1, prompt=list(prompts[1]), max_new_tokens=8))
+    eng.step()
+    eng.step()
+    # slots now sit at different depths; admit another mid-flight
+    eng.submit(Request(uid=2, prompt=list(prompts[2]), max_new_tokens=8))
+    done = {r.uid: r.generated for r in eng.run_until_done()}
+
+    assert set(done) == {0, 1, 2}
+    for uid, generated in done.items():
+        assert generated == ref[uid], (
+            f"request {uid} diverged under staggered batching: "
+            f"{generated} != {ref[uid]}")
+
+
+def test_slot_recycling_preserves_isolation():
+    """A request admitted into a *recycled* slot must not see leftovers
+    from the previous occupant's cache."""
+    model, params = _tiny_model()
+    first = [7, 8, 9, 10, 11, 12]
+    second = [4, 2]
+    ref = _decode_alone(model, params, second, max_new=6)
+
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=32)
+    eng.submit(Request(uid=0, prompt=list(first), max_new_tokens=4))
+    eng.submit(Request(uid=1, prompt=list(second), max_new_tokens=6))
+    done = {r.uid: r.generated for r in eng.run_until_done()}
+    assert done[1] == ref
+
+
+def test_engine_reads_decode_attention_from_session():
+    from repro.models.attention import plain_cache_attention
+
+    model, params = _tiny_model()
+    hits = []
+
+    def attend(q, k, v, valid, *, scale, cap=0.0):
+        hits.append(1)
+        return plain_cache_attention(q, k, v, valid, scale=scale, cap=cap)
+
+    with repro.session(kernels={"decode_attention": attend},
+                       tag="serve-test") as sess:
+        eng = ServeEngine(model, params, batch_slots=1, max_seq=16)
+        assert eng.session is sess
+        assert eng.session.describe()["tag"] == "serve-test"
+    # the session was snapshotted at construction; stepping outside the
+    # scope still uses its kernels
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    eng.run_until_done()
+    assert hits, "engine did not route decode through the session kernel"
+
+
+def test_ambient_session_does_not_leak_into_compiled_decode():
+    """The engine pins its construction-time session snapshot while
+    tracing: a kernels override merely ambient at the first step() must
+    not get baked into the jitted decode (describe() provenance and
+    behavior would disagree)."""
+    from repro.models.attention import plain_cache_attention
+
+    model, params = _tiny_model()
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=16)
+    hits = []
+
+    def attend(q, k, v, valid, *, scale, cap=0.0):
+        hits.append(1)
+        return plain_cache_attention(q, k, v, valid, scale=scale, cap=cap)
+
+    eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2))
+    with repro.session(kernels={"decode_attention": attend}):
+        eng.step()  # first step: jit traces here
+    eng.run_until_done()
+    assert not hits, "ambient session leaked into the compiled decode"
+
+
+def test_engine_attend_fn_kwarg_deprecated():
+    model, params = _tiny_model()
+    with pytest.deprecated_call():
+        ServeEngine(model, params, batch_slots=1, max_seq=16,
+                    attend_fn=lambda q, k, v, valid, *, scale, cap=0.0: q)

@@ -16,8 +16,8 @@ from repro.sharding.rules import ShardingRules, make_rules
 
 
 def _mesh(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.launch.mesh import make_mesh
+    return make_mesh(shape, axes)
 
 
 def test_rules_basic_mapping_and_divisibility():
@@ -60,7 +60,8 @@ def test_cellplan_lowers_on_tiny_mesh():
     fn, args, in_sh, out_sh, donate = plan.lowerable()
     compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                        donate_argnums=donate).lower(*args).compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    from repro.core.compat import cost_analysis
+    assert cost_analysis(compiled)["flops"] > 0
 
     shape_d = ShapeSpec("tiny_decode", 32, 4, "decode")
     plan_d = CellPlan(cfg, shape_d, mesh, BASELINE)
@@ -70,6 +71,8 @@ def test_cellplan_lowers_on_tiny_mesh():
     assert compiled is not None
 
 
+from conftest import REPO_ROOT as _REPO_ROOT, subproc_env as _subproc_env
+
 _SUBPROC_FLASH_DECODE = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -78,8 +81,8 @@ _SUBPROC_FLASH_DECODE = textwrap.dedent("""
     from repro.serving.decode_attention import make_flash_decode_attend
     from repro.models.attention import plain_cache_attention
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     B, H, KV, S, D = 4, 8, 2, 64, 16
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
@@ -103,8 +106,8 @@ def test_flash_decode_sharded_matches_plain_8dev():
     """SP flash-decoding == unsharded attention, on a real 2x4 mesh."""
     r = subprocess.run([sys.executable, "-c", _SUBPROC_FLASH_DECODE],
                        capture_output=True, text=True,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
+                       env=_subproc_env(), timeout=300,
+                       cwd=_REPO_ROOT)
     assert r.returncode == 0, r.stderr[-2000:]
     err = json.loads(r.stdout.strip().splitlines()[-1])["err"]
     assert err < 1e-4, err
@@ -119,8 +122,8 @@ _SUBPROC_TRAIN_SHARDED = textwrap.dedent("""
     from repro.models.meta import tree_init
     from repro.sharding.context import active_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("jamba-v0.1-52b", reduced=True)
     shape = ShapeSpec("tiny_train", 32, 4, "train")
     out = {}
@@ -147,8 +150,8 @@ def test_sharded_train_step_runs_and_variants_agree_8dev():
     """A real sharded train step on 8 devices; fsdp == baseline loss."""
     r = subprocess.run([sys.executable, "-c", _SUBPROC_TRAIN_SHARDED],
                        capture_output=True, text=True,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
+                       env=_subproc_env(), timeout=300,
+                       cwd=_REPO_ROOT)
     assert r.returncode == 0, r.stderr[-2000:]
     losses = json.loads(r.stdout.strip().splitlines()[-1])
     assert np.isfinite(losses["baseline"])

@@ -57,8 +57,8 @@ def test_checkpoint_async_and_shape_mismatch(tmp_path):
 
 def test_elastic_restore_onto_different_mesh(tmp_path):
     """Save unsharded, restore with explicit shardings (mesh 'resize')."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     mgr = CheckpointManager(tmp_path)
