@@ -1,0 +1,176 @@
+"""Serving benchmark: staggered mixed-length arrivals through the
+ServeEngine, dense vs paged KV cache, per scheduler.
+
+Measures, per scenario:
+ * tokens/s (decode throughput over the whole trace),
+ * time-to-first-token (mean/p-max over requests, submit -> first token),
+ * jitted calls: decode steps and prefill calls per admission — the
+   chunked-prefill claim is visible here: the legacy path pays
+   O(prompt_len) one-token decodes per admission, the chunked path
+   O(prompt_len / chunk),
+ * preemptions and block-pool stats (paged scenarios),
+ * full Session/ServingPolicy provenance via ``engine.describe()``.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--quick]
+                       [--out serving.json] [--arch codeqwen1.5-7b]
+
+The JSON output is uploaded as a CI artifact (see .github/workflows)
+to start a serving-perf trajectory across PRs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.runtime import ServingPolicy
+from repro.serving import Request, ServeEngine
+
+
+def make_workload(n_requests: int, max_new: int, seed: int = 0):
+    """Mixed-length prompts with staggered arrival steps."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n_requests):
+        length = int(rng.integers(3, 28))
+        prompt = [int(t) for t in rng.integers(1, 60, size=length)]
+        arrival = int(rng.integers(0, 3)) + 2 * uid   # staggered stream
+        reqs.append((arrival, Request(uid=uid, prompt=prompt,
+                                      max_new_tokens=max_new,
+                                      priority=int(rng.integers(0, 3)))))
+    return sorted(reqs, key=lambda ar: ar[0])
+
+
+def drive(engine: ServeEngine, workload, max_steps: int = 5000):
+    """Submit requests at their arrival step; run to completion."""
+    pending = list(workload)
+    done = []
+    t0 = time.time()
+    for step in range(max_steps):
+        while pending and pending[0][0] <= step:
+            engine.submit(pending.pop(0)[1])
+        done.extend(engine.step())
+        if not pending and not engine.active and not engine.waiting:
+            break
+    wall = time.time() - t0
+    return done, wall
+
+
+def run_scenario(name: str, model, params, policy: ServingPolicy, *,
+                 slots: int, max_seq: int, workload) -> dict:
+    with repro.session(tag=f"bench_serving:{name}"):
+        engine = ServeEngine(model, params, batch_slots=slots,
+                             max_seq=max_seq, policy=policy)
+    # copy the workload so every scenario decodes the same requests
+    fresh = [(a, Request(uid=r.uid, prompt=list(r.prompt),
+                         max_new_tokens=r.max_new_tokens,
+                         priority=r.priority))
+             for a, r in workload]
+    done, wall = drive(engine, fresh)
+    toks = sum(len(r.generated) for r in done)
+    ttfts = [r.first_token_time - r.submit_time for r in done
+             if r.first_token_time is not None]
+    admissions = len(done) + engine.preemptions
+    prompt_tokens = sum(len(r.prompt) for _, r in workload)
+    out = {
+        "scenario": name,
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(toks / wall, 1) if wall > 0 else None,
+        "ttft_mean_s": round(float(np.mean(ttfts)), 4) if ttfts else None,
+        "ttft_max_s": round(float(np.max(ttfts)), 4) if ttfts else None,
+        "decode_calls": engine.decode_calls,
+        "prefill_calls": engine.prefill_calls,
+        "prefill_calls_per_admission":
+            round(engine.prefill_calls / max(1, admissions), 2),
+        "prompt_tokens": prompt_tokens,
+        "preemptions": engine.preemptions,
+        "provenance": engine.describe(),
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small model + short trace (CI smoke)")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.quick:
+        overrides = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                         d_ff=128, vocab_size=64)
+    cfg = get_config(args.arch, reduced=True, **overrides)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_req = args.requests or (6 if args.quick else 12)
+    max_new = args.max_new or (6 if args.quick else 16)
+    workload = make_workload(n_req, max_new)
+    chunk = 8
+
+    # ~half the blocks a full complement of slots could want: the
+    # priority scenario exercises evict + requeue under real pressure
+    tight_pool = 2 * args.slots + 1
+    scenarios = [
+        ("dense-fifo-legacy-prefill",
+         ServingPolicy(cache="dense", scheduler="fifo", prefill_chunk=0)),
+        ("dense-fifo-chunked",
+         ServingPolicy(cache="dense", scheduler="fifo",
+                       prefill_chunk=chunk)),
+        ("paged-fifo",
+         ServingPolicy(cache="paged", scheduler="fifo", block_size=16,
+                       prefill_chunk=chunk)),
+        ("paged-sjf",
+         ServingPolicy(cache="paged", scheduler="sjf", block_size=16,
+                       prefill_chunk=chunk)),
+        ("paged-priority-tight-pool",
+         ServingPolicy(cache="paged", scheduler="priority", block_size=16,
+                       num_blocks=tight_pool, prefill_chunk=chunk)),
+    ]
+
+    results = []
+    for name, policy in scenarios:
+        res = run_scenario(name, model, params, policy, slots=args.slots,
+                           max_seq=args.max_seq, workload=workload)
+        results.append(res)
+        print(f"[{name:>28s}] {res['tokens']:4d} tok in "
+              f"{res['wall_s']:7.2f}s = {res['tok_per_s']:8.1f} tok/s | "
+              f"ttft {res['ttft_mean_s']}s | "
+              f"prefill calls/admission {res['prefill_calls_per_admission']}"
+              f" | preempt {res['preemptions']}")
+
+    legacy = results[0]
+    chunked = results[1]
+    print(f"\nchunked prefill: {chunked['prefill_calls']} jitted prefill "
+          f"calls vs {legacy['prefill_calls']} legacy one-token calls "
+          f"({legacy['prefill_calls'] / max(1, chunked['prefill_calls']):.1f}"
+          f"x fewer compiled-call dispatches per admission stream)")
+
+    payload = {"arch": cfg.name, "quick": args.quick, "slots": args.slots,
+               "max_seq": args.max_seq, "prefill_chunk": chunk,
+               "results": results}
+    blob = json.dumps(payload, indent=2, default=str)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob)
+        print(f"\nwrote {args.out}")
+    else:
+        print(blob)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,11 +7,11 @@ Top-level API: the unified runtime Session —
         ...
 """
 
-from repro.runtime import (KernelOverrides, PrecisionPolicy, Session,
-                           current_session, default_session, session)
+from repro.runtime import (KernelOverrides, PrecisionPolicy, ServingPolicy,
+                           Session, current_session, default_session, session)
 
 __all__ = [
-    "Session", "KernelOverrides", "PrecisionPolicy",
+    "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
     "session", "current_session", "default_session",
 ]
 

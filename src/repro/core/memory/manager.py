@@ -1,12 +1,15 @@
 """Memory-management interface (paper §4.1.2, Listing 3).
 
 On GPU, Flashlight's ``MemoryManagerAdapter`` interposes on raw device
-allocation.  On TPU, XLA owns HBM, so the open interface is adapted (see
-DESIGN.md §2): managers run the framework's *host-side* buffer pool, and —
-crucially for the paper's §5.2.2 study — replay recorded allocation traces
-from real model steps, so allocator *policies* (bucketing, block splitting,
+allocation.  On TPU, XLA owns HBM, so the open interface is adapted:
+managers run the framework's *host-side* buffer pool, and — crucially for
+the paper's §5.2.2 study — replay recorded allocation traces from real
+model steps, so allocator *policies* (bucketing, block splitting,
 split-size thresholds) can be researched and compared exactly as the paper
-describes.
+describes.  They also serve a *live* workload: the paged KV-cache serving
+runtime (``repro/serving/kv_cache.py``) delegates block allocation to
+these managers, so the same policies drive admission/preemption behavior
+under real serving traffic.
 
 The arena model: a manager controls a contiguous arena of ``capacity``
 bytes.  ``alloc`` returns an offset; ``free`` returns the block.  Internal

@@ -23,7 +23,7 @@ NEG_INF = -2.0 ** 30
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
-                   acc_scr, *, scale: float, n_kb: int):
+                   acc_scr, *, scale: float, n_kb: int, per_row: bool):
     kb = pl.program_id(1)
 
     @pl.when(kb == 0)
@@ -34,7 +34,7 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
 
     q = q_ref[0]                                    # [1, d] row
     k = k_ref[0]                                    # [bk, d]
-    valid = valid_ref[...]                          # [bk]
+    valid = valid_ref[0] if per_row else valid_ref[...]  # [bk]
     scores = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale  # [1, bk]
@@ -58,7 +58,9 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
 @functools.partial(jax.jit, static_argnames=("scale", "bk", "interpret"))
 def flash_decode(q, k, v, valid, *, scale: float | None = None,
                  bk: int = 512, interpret: bool = False):
-    """q: [N, D]; k, v: [N, S, D]; valid: [S] bool -> [N, D]."""
+    """q: [N, D]; k, v: [N, S, D]; valid: [S] bool shared across rows, or
+    [N, S] per-row (paged/continuous-batching caches where every slot
+    sits at its own depth) -> [N, D]."""
     n, d = q.shape
     s = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
@@ -66,14 +68,18 @@ def flash_decode(q, k, v, valid, *, scale: float | None = None,
     assert s % bk == 0, (s, bk)
     n_kb = s // bk
     grid = (n, n_kb)
+    per_row = valid.ndim == 2
+    valid_spec = (pl.BlockSpec((1, bk), lambda i, j: (i, j)) if per_row
+                  else pl.BlockSpec((bk,), lambda i, j: (j,)))
     out = pl.pallas_call(
-        functools.partial(_decode_kernel, scale=scale, n_kb=n_kb),
+        functools.partial(_decode_kernel, scale=scale, n_kb=n_kb,
+                          per_row=per_row),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, d), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((1, bk, d), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, bk, d), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            valid_spec,
         ],
         out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1, d), v.dtype),

@@ -39,14 +39,16 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 def flash_decode(q, k, v, valid, *, scale: float | None = None):
-    """q: [BH, D]; k,v: [BH, S, D]; valid: [S] bool -> [BH, D]."""
+    """q: [BH, D]; k,v: [BH, S, D]; valid: [S] or per-row [BH, S] bool
+    -> [BH, D]."""
     d = q.shape[-1]
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    vm = valid if valid.ndim == 2 else valid[None, :]
     scores = jnp.einsum("nd,nsd->ns", q, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    scores = jnp.where(vm, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
-    w = jnp.where(valid[None, :], w, 0.0)
+    w = jnp.where(vm, w, 0.0)
     return jnp.einsum("ns,nsd->nd", w.astype(v.dtype), v)
 
 

@@ -75,7 +75,9 @@ def _qkv(p, x, cfg, positions):
 
 
 def _sdpa_ref(q, k, v, mask, scale, cap: float = 0.0):
-    """Reference grouped attention. q:[B,S,H,D] k/v:[B,S,Kv,D]."""
+    """Reference grouped attention. q:[B,S,H,D] k/v:[B,S,Kv,D];
+    mask: [Sq, Sk] shared, or [B, Sq, Sk] per-batch (chunked prefill at
+    per-slot positions)."""
     b, sq, h, d = q.shape
     kvh = k.shape[2]
     g = h // kvh
@@ -83,7 +85,8 @@ def _sdpa_ref(q, k, v, mask, scale, cap: float = 0.0):
     scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
                         preferred_element_type=jnp.float32) * scale
     scores = softcap(scores, cap)
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    m = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+    scores = jnp.where(m, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
     return out.reshape(b, sq, h, v.shape[-1])  # dv may differ from dk (MLA)
@@ -141,18 +144,79 @@ def gqa_attention(p, x, cfg, *, positions, window: int = 0,
     return linear(out.reshape(b, s, -1), p["wo"])
 
 
-def gqa_cache_spec(cfg, batch: int, max_seq: int, window: int = 0):
-    """Cache metas for one layer. Window layers get ring buffers."""
+# ===========================================================================
+# quantized (fp8) cache storage
+# ===========================================================================
+
+FP8_MAX = 448.0  # float8_e4m3fn max normal
+
+
+def quantize_kv(x, cache_dtype):
+    """Quantize a K/V tensor for cache storage.
+
+    fp8 caches store a per-position per-head scale (amax over the head
+    dim / FP8_MAX) next to the values, so dequantized reads recover the
+    full dynamic range — raw casts crush small-magnitude heads.  Returns
+    ``(stored, scale)``; scale is None for non-fp8 cache dtypes.
+    """
+    if cache_dtype != jnp.float8_e4m3fn:
+        return x.astype(cache_dtype), None
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = jnp.maximum(amax / FP8_MAX, 1e-12)
+    return (x32 / scale[..., None]).astype(cache_dtype), scale
+
+
+def dequantize_kv(stored, scale, out_dtype):
+    """Inverse of :func:`quantize_kv`; identity when scale is None."""
+    if scale is None:
+        return stored
+    return (stored.astype(jnp.float32)
+            * scale[..., None]).astype(out_dtype)
+
+
+def gqa_cache_spec(cfg, batch: int, max_seq: int, window: int = 0,
+                   paged=None):
+    """Cache metas for one layer.  Window layers get per-slot ring
+    buffers (always dense — they are already small and fixed-size).
+    ``paged=(num_blocks, block_size)`` lays global-attention caches out
+    as a shared block pool indexed through a block table; fp8 caches
+    additionally carry per-position per-head scale planes.
+    """
     kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.resolved_cache_dtype
+    fp8 = cfg.cache_dtype == "fp8"
+    if paged is not None and window == 0:
+        num_blocks, block_size = paged
+        p = num_blocks * block_size
+        spec = {
+            "k": ParamMeta((p, kv, hd), (None, "kv_heads", None), dt,
+                           "zeros"),
+            "v": ParamMeta((p, kv, hd), (None, "kv_heads", None), dt,
+                           "zeros"),
+        }
+        if fp8:
+            spec["k_scale"] = ParamMeta((p, kv), (None, "kv_heads"),
+                                        jnp.float32, "zeros")
+            spec["v_scale"] = ParamMeta((p, kv), (None, "kv_heads"),
+                                        jnp.float32, "zeros")
+        return spec
     s = min(window, max_seq) if window > 0 else max_seq
     seq_ax = None if window > 0 else "seq_shard"
-    dt = cfg.resolved_cache_dtype
-    return {
+    spec = {
         "k": ParamMeta((batch, s, kv, hd),
                        ("batch", seq_ax, "kv_heads", None), dt, "zeros"),
         "v": ParamMeta((batch, s, kv, hd),
                        ("batch", seq_ax, "kv_heads", None), dt, "zeros"),
     }
+    if fp8:
+        spec["k_scale"] = ParamMeta((batch, s, kv),
+                                    ("batch", seq_ax, "kv_heads"),
+                                    jnp.float32, "zeros")
+        spec["v_scale"] = ParamMeta((batch, s, kv),
+                                    ("batch", seq_ax, "kv_heads"),
+                                    jnp.float32, "zeros")
+    return spec
 
 
 def gqa_prefill(p, x, cfg, *, positions, window: int = 0, max_seq: int,
@@ -170,24 +234,29 @@ def gqa_prefill(p, x, cfg, *, positions, window: int = 0, max_seq: int,
 
 
 def _write_prefill_cache(k, v, cfg, window, max_seq):
-    k = k.astype(cfg.resolved_cache_dtype)
-    v = v.astype(cfg.resolved_cache_dtype)
+    dt = cfg.resolved_cache_dtype
+    k, k_scale = quantize_kv(k, dt)
+    v, v_scale = quantize_kv(v, dt)
     b, s = k.shape[:2]
-    if window > 0:
-        w = min(window, max_seq)
-        if s >= w:
-            # ring-buffer layout: slot i holds position p with p % w == i,
-            # matching decode's `slot = pos % w` convention
-            shift = (s - w) % w
-            kw = jnp.roll(k[:, -w:], shift, axis=1)
-            vw = jnp.roll(v[:, -w:], shift, axis=1)
-        else:
-            kw = jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
-            vw = jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
-        return {"k": kw, "v": vw}
-    pad = max_seq - s
-    return {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
-            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+
+    def pack(arr):
+        """Lay out one [B, S, ...] tensor as its cache-resident form."""
+        trail = ((0, 0),) * (arr.ndim - 2)
+        if window > 0:
+            w = min(window, max_seq)
+            if s >= w:
+                # ring-buffer layout: slot i holds position p with
+                # p % w == i, matching decode's `slot = pos % w`
+                shift = (s - w) % w
+                return jnp.roll(arr[:, -w:], shift, axis=1)
+            return jnp.pad(arr, ((0, 0), (0, w - s)) + trail)
+        return jnp.pad(arr, ((0, 0), (0, max_seq - s)) + trail)
+
+    cache = {"k": pack(k), "v": pack(v)}
+    if k_scale is not None:
+        cache["k_scale"] = pack(k_scale)
+        cache["v_scale"] = pack(v_scale)
+    return cache
 
 
 def _decode_positions(pos, b):
@@ -209,6 +278,48 @@ def _batched_cache_update(cache, new, slot):
     return jax.vmap(upd)(cache, new, slot)
 
 
+def _scalar_cache_update(cache, new, slot):
+    """Write ``new`` [B, 1, ...] at one shared position ``slot``."""
+    return jax.lax.dynamic_update_slice(
+        cache, new, (0, slot) + (0,) * (cache.ndim - 2))
+
+
+# -- paged (block-table) addressing -----------------------------------------
+# The block table is duck-typed: anything with ``.table`` ([B, MB] int32
+# physical block ids) and ``.block_size`` (static int) works — the real
+# class lives in repro/serving/kv_cache.py to keep models import-light.
+
+def _paged_write_index(block_table, pos):
+    """Physical pool index for writing position ``pos`` [B] (or [B, T])."""
+    bs = block_table.block_size
+    blk = jnp.take_along_axis(block_table.table,
+                              (pos // bs).reshape(pos.shape[0], -1),
+                              axis=1).reshape(pos.shape)
+    return blk * bs + pos % bs
+
+
+def _paged_read_index(block_table):
+    """[B, L] physical pool indices for the full logical view
+    (L = max_blocks * block_size); unmapped blocks resolve to the
+    reserved trash block and must be masked by validity."""
+    bs = block_table.block_size
+    mb = block_table.table.shape[1]
+    l = jnp.arange(mb * bs, dtype=jnp.int32)
+    return block_table.table[:, l // bs] * bs + (l % bs)[None, :]
+
+
+def _paged_gather(cache, block_table, out_dtype):
+    """Gather the logical [B, L, ...] K/V view through the block table,
+    dequantizing fp8 pools on the way out."""
+    idx = _paged_read_index(block_table)
+    k = cache["k"][idx]
+    v = cache["v"][idx]
+    if "k_scale" in cache:
+        k = dequantize_kv(k, cache["k_scale"][idx], out_dtype)
+        v = dequantize_kv(v, cache["v_scale"][idx], out_dtype)
+    return k, v
+
+
 def decode_valid_mask(pos, s_cache, window: int = 0):
     """Causal validity over cache slots: [S] for scalar ``pos``, [B, S]
     for a per-slot position vector.  Once a ring buffer has wrapped
@@ -222,7 +333,8 @@ def decode_valid_mask(pos, s_cache, window: int = 0):
     return mask
 
 
-def gqa_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
+def gqa_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None,
+               block_table=None):
     """One decode step. x: [B, 1, D]; pos: scalar position shared by the
     whole batch, or a [B] int vector of *per-slot* positions (continuous
     batching admits requests mid-flight, so slots decode at different
@@ -232,6 +344,10 @@ def gqa_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
     sequence-sharded flash-decoding implementation; when omitted, the
     session's ``kernels.decode_attention`` override applies (ring-buffer
     window caches stay local and always use plain cache attention).
+
+    With ``block_table`` (paged serving), global-attention caches are
+    block pools: the new K/V scatters through the table and attention
+    reads a gathered logical view, so the attend interface is unchanged.
     """
     b = x.shape[0]
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -241,26 +357,175 @@ def gqa_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
     v = linear(x, p["wv"]).reshape(b, 1, kv, hd)
     q = apply_rope(q, pos_arr, cfg.rope_theta)[:, 0]          # [B, H, D]
     k = apply_rope(k, pos_arr, cfg.rope_theta)
-    k = k.astype(cache["k"].dtype)                            # fp8 cache opt
-    v = v.astype(cache["v"].dtype)
-    s_cache = cache["k"].shape[1]
-    slot = jnp.mod(pos, s_cache) if window > 0 else pos
-    if per_slot:
-        new_k = _batched_cache_update(cache["k"], k, slot)
-        new_v = _batched_cache_update(cache["v"], v, slot)
+    scaled = "k_scale" in cache
+    if scaled:
+        kq, k_sc = quantize_kv(k, cache["k"].dtype)
+        vq, v_sc = quantize_kv(v, cache["v"].dtype)
     else:
-        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-    valid = decode_valid_mask(pos, s_cache, window)
+        kq, vq = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    new_cache = dict(cache)
+    if block_table is not None and window == 0:
+        pos_b = pos if per_slot else jnp.full((b,), pos, jnp.int32)
+        phys = _paged_write_index(block_table, pos_b)          # [B]
+        new_cache["k"] = cache["k"].at[phys].set(kq[:, 0])
+        new_cache["v"] = cache["v"].at[phys].set(vq[:, 0])
+        if scaled:
+            new_cache["k_scale"] = cache["k_scale"].at[phys].set(k_sc[:, 0])
+            new_cache["v_scale"] = cache["v_scale"].at[phys].set(v_sc[:, 0])
+        k_view, v_view = _paged_gather(new_cache, block_table, x.dtype)
+        if scaled:
+            # quantization is a storage effect only: the token being
+            # decoded attends its own K/V exactly (it never left VMEM)
+            k_view = _batched_cache_update(k_view, k.astype(x.dtype), pos_b)
+            v_view = _batched_cache_update(v_view, v.astype(x.dtype), pos_b)
+        valid = decode_valid_mask(pos_b, k_view.shape[1])
+    else:
+        s_cache = cache["k"].shape[1]
+        slot = jnp.mod(pos, s_cache) if window > 0 else pos
+        upd = _batched_cache_update if per_slot else _scalar_cache_update
+        new_cache["k"] = upd(cache["k"], kq, slot)
+        new_cache["v"] = upd(cache["v"], vq, slot)
+        if scaled:
+            new_cache["k_scale"] = upd(cache["k_scale"], k_sc, slot)
+            new_cache["v_scale"] = upd(cache["v_scale"], v_sc, slot)
+            k_view = dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                                   x.dtype)
+            v_view = dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                                   x.dtype)
+            k_view = upd(k_view, k.astype(x.dtype), slot)
+            v_view = upd(v_view, v.astype(x.dtype), slot)
+        else:
+            k_view, v_view = new_cache["k"], new_cache["v"]
+        valid = decode_valid_mask(pos, s_cache, window)
     scale = 1.0 / math.sqrt(hd)
     attend = attend_fn
     if attend is None and window == 0:
         attend = _session_kernels().decode_attention
     attend = attend or plain_cache_attention
-    out = attend(q, new_k, new_v, valid, scale=scale,
+    out = attend(q, k_view, v_view, valid, scale=scale,
                  cap=cfg.logit_softcap)
     out = linear(out.reshape(b, 1, -1), p["wo"])
-    return out, {"k": new_k, "v": new_v}
+    return out, new_cache
+
+
+def gqa_prefill_chunk(p, cache, x, cfg, *, positions, count,
+                      window: int = 0, block_table=None):
+    """Chunked batched prefill: consume a [B, T] chunk of prompt tokens
+    in ONE call, writing K/V into the decode cache at per-slot positions
+    and attending causally over cache-so-far + chunk.
+
+    x: [B, T, D] chunk activations; positions: [B, T] int32 per-token
+    absolute positions; count: [B] number of valid tokens this chunk
+    (0 = slot not prefilling — its writes are dropped, its outputs are
+    garbage the caller discards).  Replaces O(prompt_len) one-token
+    decode calls per admission with O(prompt_len / T) chunk calls.
+    """
+    b, t, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(x, p["wq"]).reshape(b, t, h, hd)
+    k = linear(x, p["wk"]).reshape(b, t, kvh, hd)
+    v = linear(x, p["wv"]).reshape(b, t, kvh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scaled = "k_scale" in cache
+    if scaled:
+        kq, k_sc = quantize_kv(k, cache["k"].dtype)
+        vq, v_sc = quantize_kv(v, cache["v"].dtype)
+    else:
+        kq, vq = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        k_sc = v_sc = None
+    tok_valid = jnp.arange(t, dtype=jnp.int32)[None, :] < count[:, None]
+    scale = 1.0 / math.sqrt(hd)
+    new_cache = dict(cache)
+    qpos = positions[:, :, None]                              # [B, T, 1]
+
+    if window > 0:
+        # Ring buffers: attend over (ring-as-of-chunk-start ++ chunk),
+        # then write only the chunk tail that survives the window —
+        # writing first would let late chunk tokens overwrite ring slots
+        # early chunk queries still need.
+        w = cache["k"].shape[1]
+        i = jnp.arange(w, dtype=jnp.int32)[None, :]
+        sm1 = positions[:, :1] - 1                            # start - 1
+        ring_pos = sm1 - jnp.mod(sm1 - i, w)                  # [B, w]
+        ring_ok = ring_pos >= 0
+        if scaled:
+            ring_k = dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+            ring_v = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+            chunk_k = dequantize_kv(kq, k_sc, x.dtype)
+            chunk_v = dequantize_kv(vq, v_sc, x.dtype)
+        else:
+            ring_k, ring_v = cache["k"], cache["v"]
+            # round-trip chunk K/V through the cache dtype: chunk queries
+            # see exactly what later decode steps will read back
+            chunk_k, chunk_v = kq.astype(x.dtype), vq.astype(x.dtype)
+        kp = positions[:, None, :]                            # [B, 1, T]
+        ring_mask = (ring_ok[:, None, :] & (ring_pos[:, None, :] <= qpos)
+                     & (qpos - ring_pos[:, None, :] < w))
+        in_window = tok_valid[:, None, :] & (qpos - kp < w)
+        keys = [ring_k.astype(x.dtype), chunk_k]
+        vals = [ring_v.astype(x.dtype), chunk_v]
+        if scaled:
+            # cross-token reads see storage quantization; self is exact
+            masks = [ring_mask, in_window & (kp < qpos),
+                     tok_valid[:, None, :] & (kp == qpos)]
+            keys.append(k.astype(x.dtype))
+            vals.append(v.astype(x.dtype))
+        else:
+            masks = [ring_mask, in_window & (kp <= qpos)]
+        out = _sdpa_ref(q, jnp.concatenate(keys, 1),
+                        jnp.concatenate(vals, 1),
+                        jnp.concatenate(masks, -1), scale,
+                        cfg.logit_softcap)
+        end = positions[:, :1] + count[:, None]               # [B, 1]
+        keep = tok_valid & (positions >= end - w)
+        widx = jnp.where(keep, jnp.mod(positions, w), w)      # w = dropped
+        bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, t))
+        for key, newv in (("k", kq), ("v", vq),
+                          ("k_scale", k_sc), ("v_scale", v_sc)):
+            if key in cache:
+                new_cache[key] = cache[key].at[bidx, widx].set(
+                    newv, mode="drop")
+        return linear(out.reshape(b, t, -1), p["wo"]), new_cache
+
+    if block_table is not None:
+        pool = cache["k"].shape[0]
+        phys = _paged_write_index(block_table, positions)     # [B, T]
+        phys = jnp.where(tok_valid, phys, pool)               # OOB = dropped
+        for key, newv in (("k", kq), ("v", vq),
+                          ("k_scale", k_sc), ("v_scale", v_sc)):
+            if key in cache:
+                new_cache[key] = cache[key].at[phys].set(newv, mode="drop")
+        k_view, v_view = _paged_gather(new_cache, block_table, x.dtype)
+    else:
+        s_cache = cache["k"].shape[1]
+        widx = jnp.where(tok_valid, positions, s_cache)       # OOB = dropped
+        bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, t))
+        for key, newv in (("k", kq), ("v", vq),
+                          ("k_scale", k_sc), ("v_scale", v_sc)):
+            if key in cache:
+                new_cache[key] = cache[key].at[bidx, widx].set(
+                    newv, mode="drop")
+        if scaled:
+            k_view = dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                                   x.dtype)
+            v_view = dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                                   x.dtype)
+        else:
+            k_view, v_view = new_cache["k"], new_cache["v"]
+    kv_idx = jnp.arange(k_view.shape[1], dtype=jnp.int32)
+    if scaled:
+        # cross-token reads see storage quantization; self is exact
+        kp = positions[:, None, :]                            # [B, 1, T]
+        mask = jnp.concatenate(
+            [kv_idx[None, None, :] < qpos,
+             tok_valid[:, None, :] & (kp == qpos)], -1)
+        k_view = jnp.concatenate([k_view, k.astype(x.dtype)], 1)
+        v_view = jnp.concatenate([v_view, v.astype(x.dtype)], 1)
+    else:
+        mask = kv_idx[None, None, :] <= qpos                  # [B, T, S]
+    out = _sdpa_ref(q, k_view, v_view, mask, scale, cfg.logit_softcap)
+    return linear(out.reshape(b, t, -1), p["wo"]), new_cache
 
 
 # ===========================================================================
@@ -383,8 +648,13 @@ def mla_attention(p, x, cfg, *, positions, causal: bool = True,
     return linear(out.reshape(b, s, -1), p["wo"])
 
 
-def mla_cache_spec(cfg, batch: int, max_seq: int, window: int = 0):
+def mla_cache_spec(cfg, batch: int, max_seq: int, window: int = 0,
+                   paged=None):
     """MLA caches the *latent* (c_kv, k_rope) — the memory win of MLA."""
+    if paged is not None:
+        raise NotImplementedError(
+            "paged KV cache is not implemented for MLA latent caches; "
+            "serve MLA models with ServingPolicy(cache='dense')")
     m = cfg.mla
     dt = cfg.resolved_cache_dtype
     return {
@@ -408,13 +678,17 @@ def mla_prefill(p, x, cfg, *, positions, max_seq: int, window: int = 0,
     return out, cache
 
 
-def mla_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None):
+def mla_decode(p, cache, x, cfg, *, pos, window: int = 0, attend_fn=None,
+               block_table=None):
     """Absorbed-matmul decode on the latent cache (DeepSeek-V2 appendix).
 
     Per head: score = q_nopeᵀ·W_uk·c + q_ropeᵀ·k_rope, so W_uk is folded
     into q once per step and attention runs in the compressed space — the
     cache is (kv_lora + rope) wide instead of heads×(nope+v).
     """
+    if block_table is not None:
+        raise NotImplementedError(
+            "paged KV cache is not implemented for MLA decode")
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads

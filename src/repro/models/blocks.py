@@ -94,10 +94,15 @@ class DecoderLayer:
         return x, aux
 
     # -- caches ---------------------------------------------------------------
-    def cache_spec(self, batch: int, max_seq: int) -> dict:
+    def cache_spec(self, batch: int, max_seq: int, paged=None) -> dict:
         cfg, sig = self.cfg, self.sig
         if sig.kind == "A":
-            return self._cache_spec(cfg, batch, max_seq, window=sig.window)
+            return self._cache_spec(cfg, batch, max_seq, window=sig.window,
+                                    paged=paged)
+        if paged is not None:
+            raise NotImplementedError(
+                "paged KV cache: SSM layers carry recurrent state, not a "
+                "positional cache; there is nothing to page")
         return ssm_mod.ssm_cache_spec(cfg, batch, max_seq)
 
     def prefill(self, p, x, *, positions, max_seq: int, prefix_len: int = 0):
@@ -120,7 +125,7 @@ class DecoderLayer:
             x = x + h
         return x, cache
 
-    def decode(self, p, cache, x, *, pos, attend_fn=None):
+    def decode(self, p, cache, x, *, pos, attend_fn=None, block_table=None):
         cfg, sig = self.cfg, self.sig
         h = apply_norm(p["norm1"], x, cfg)
         if sig.kind == "A":
@@ -128,9 +133,38 @@ class DecoderLayer:
             # sequence-sharded -> flash-decoding attend_fn
             fn = None if sig.window > 0 else attend_fn
             h, cache = self._attn_decode(p["attn"], cache, h, cfg, pos=pos,
-                                         window=sig.window, attend_fn=fn)
+                                         window=sig.window, attend_fn=fn,
+                                         block_table=block_table)
         else:
             h, cache = ssm_mod.ssm_decode(p["ssm"], cache, h, cfg, pos=pos)
+        x = x + h
+        if sig.has_mlp:
+            h = apply_norm(p["norm2"], x, cfg)
+            if sig.use_moe:
+                h, _ = moe_mod.apply_moe(p["moe"], h, cfg)
+            else:
+                h = apply_mlp(p["mlp"], h, cfg)
+            x = x + h
+        return x, cache
+
+    def prefill_chunk(self, p, cache, x, *, positions, count,
+                      block_table=None):
+        """Consume one [B, T] prompt chunk against the decode cache (see
+        ``attention.gqa_prefill_chunk``).  Attention-cache layers only:
+        SSM recurrences need a batch-level bulk prefill."""
+        cfg, sig = self.cfg, self.sig
+        if sig.kind != "A":
+            raise NotImplementedError(
+                "chunked prefill: SSM layers advance recurrent state on "
+                "every call and need batch-level bulk prefill")
+        if cfg.attention == "mla":
+            raise NotImplementedError(
+                "chunked prefill is not implemented for MLA")
+        h = apply_norm(p["norm1"], x, cfg)
+        h, cache = attn.gqa_prefill_chunk(
+            p["attn"], cache, h, cfg, positions=positions, count=count,
+            window=sig.window,
+            block_table=None if sig.window > 0 else block_table)
         x = x + h
         if sig.has_mlp:
             h = apply_norm(p["norm2"], x, cfg)
@@ -158,8 +192,8 @@ class GroupBlock:
             aux = aux + a
         return x, aux
 
-    def cache_spec(self, batch, max_seq):
-        return {f"l{i}": lyr.cache_spec(batch, max_seq)
+    def cache_spec(self, batch, max_seq, paged=None):
+        return {f"l{i}": lyr.cache_spec(batch, max_seq, paged=paged)
                 for i, lyr in enumerate(self.layers)}
 
     def prefill(self, p, x, **kw):
@@ -172,6 +206,13 @@ class GroupBlock:
         new = {}
         for i, lyr in enumerate(self.layers):
             x, new[f"l{i}"] = lyr.decode(p[f"l{i}"], cache[f"l{i}"], x, **kw)
+        return x, new
+
+    def prefill_chunk(self, p, cache, x, **kw):
+        new = {}
+        for i, lyr in enumerate(self.layers):
+            x, new[f"l{i}"] = lyr.prefill_chunk(p[f"l{i}"], cache[f"l{i}"],
+                                                x, **kw)
         return x, new
 
 
@@ -201,13 +242,13 @@ class Stage:
             return {"r0": metas}
         return {f"r{i}": self.block.abstract() for i in range(self.repeats)}
 
-    def cache_spec(self, batch, max_seq):
-        spec = self.block.cache_spec(batch, max_seq)
+    def cache_spec(self, batch, max_seq, paged=None):
+        spec = self.block.cache_spec(batch, max_seq, paged=paged)
         if self.scan:
             return stack_tree(spec, self.repeats)
         if self.repeats == 1:
             return {"r0": spec}
-        return {f"r{i}": self.block.cache_spec(batch, max_seq)
+        return {f"r{i}": self.block.cache_spec(batch, max_seq, paged=paged)
                 for i in range(self.repeats)}
 
     # -- full sequence -------------------------------------------------------
@@ -254,6 +295,23 @@ class Stage:
         def body(h, inp):
             layer_p, layer_cache = inp
             h, new_cache = self.block.decode(layer_p, layer_cache, h, **kw)
+            return h, new_cache
+
+        x, new = jax.lax.scan(body, x, (p, cache))
+        return x, new
+
+    def prefill_chunk(self, p, cache, x, **kw):
+        if not self.scan:
+            new = {}
+            for i in range(self.repeats):
+                x, new[f"r{i}"] = self.block.prefill_chunk(
+                    p[f"r{i}"], cache[f"r{i}"], x, **kw)
+            return x, new
+
+        def body(h, inp):
+            layer_p, layer_cache = inp
+            h, new_cache = self.block.prefill_chunk(layer_p, layer_cache, h,
+                                                    **kw)
             return h, new_cache
 
         x, new = jax.lax.scan(body, x, (p, cache))

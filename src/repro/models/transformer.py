@@ -151,6 +151,54 @@ class LM:
         return tree_init(self.cache_spec(batch, max_seq),
                          jax.random.PRNGKey(0))
 
+    def paged_cache_spec(self, batch: int, max_seq: int, *, num_blocks: int,
+                         block_size: int):
+        """Cache metas with global-attention layers laid out as shared
+        block pools (window ring buffers stay dense per slot)."""
+        return [s.cache_spec(batch, max_seq, paged=(num_blocks, block_size))
+                for s in self.stages]
+
+    def init_paged_cache(self, batch: int, max_seq: int, *, num_blocks: int,
+                         block_size: int):
+        return tree_init(
+            self.paged_cache_spec(batch, max_seq, num_blocks=num_blocks,
+                                  block_size=block_size),
+            jax.random.PRNGKey(0))
+
+    def has_recurrent_state(self) -> bool:
+        """True when any layer carries SSM recurrent state (staggered
+        per-slot admission corrupts it — see ``ServeEngine``)."""
+        return any(self.cfg.layer_kind(i) == "M"
+                   for i in range(self.cfg.n_layers))
+
+    def supports_paged_cache(self) -> bool:
+        return not self.has_recurrent_state() and self.cfg.attention != "mla"
+
+    def supports_chunked_prefill(self) -> bool:
+        return not self.has_recurrent_state() and self.cfg.attention != "mla"
+
+    def prefill_step(self, p, cache, tokens, start, count, *,
+                     block_table=None):
+        """Chunked batched prefill: one jitted call consumes a [B, T]
+        chunk of prompt tokens per slot, writing K/V into ``cache`` at
+        positions ``start[b] + t`` for the first ``count[b]`` tokens of
+        each row (count 0 = slot untouched).  Returns the new cache;
+        logits come from the subsequent ``decode_step`` on the last
+        prompt token, as in per-token admission."""
+        cfg = self.cfg
+        x = embed(p["embed"], tokens, cfg)
+        t = tokens.shape[1]
+        positions = (jnp.asarray(start, jnp.int32)[:, None]
+                     + jnp.arange(t, dtype=jnp.int32)[None, :])
+        count = jnp.asarray(count, jnp.int32)
+        new_caches = []
+        for stage, sp, sc in zip(self.stages, p["stages"], cache):
+            x, nc = stage.prefill_chunk(sp, sc, x, positions=positions,
+                                        count=count,
+                                        block_table=block_table)
+            new_caches.append(nc)
+        return new_caches
+
     def prefill(self, p, tokens, *, max_seq: int, image_embeds=None):
         cfg = self.cfg
         x = embed(p["embed"], tokens, cfg)
@@ -168,14 +216,17 @@ class LM:
         logits = unembed(h, self._head_table(p), cfg)[:, 0]
         return logits, caches
 
-    def decode_step(self, p, cache, token, pos, *, attend_fn=None):
-        """token: [B, 1] int; pos: scalar int32 or per-slot [B] int32.
+    def decode_step(self, p, cache, token, pos, *, attend_fn=None,
+                    block_table=None):
+        """token: [B, 1] int; pos: scalar int32 or per-slot [B] int32;
+        block_table routes global-attention caches through a paged pool.
         Returns ([B, V], cache)."""
         cfg = self.cfg
         x = embed(p["embed"], token, cfg)
         new_caches = []
         for stage, sp, sc in zip(self.stages, p["stages"], cache):
-            x, nc = stage.decode(sp, sc, x, pos=pos, attend_fn=attend_fn)
+            x, nc = stage.decode(sp, sc, x, pos=pos, attend_fn=attend_fn,
+                                 block_table=block_table)
             new_caches.append(nc)
         h = apply_norm(p["final_norm"], x, cfg)
         logits = unembed(h, self._head_table(p), cfg)[:, 0]

@@ -76,6 +76,53 @@ class PrecisionPolicy:
                 "cache_dtype": self.cache_dtype}
 
 
+@dataclass(frozen=True)
+class ServingPolicy:
+    """Serving-scenario knobs carried by a :class:`Session`.
+
+    cache:
+        KV-cache layout — ``"dense"`` (per-slot ``max_seq`` reservation,
+        the compatibility path) or ``"paged"`` (fixed-size blocks shared
+        through a per-slot block table; see ``serving/kv_cache.py``).
+    block_size / num_blocks:
+        paged layout: positions per block, and total pool blocks (None
+        derives a pool large enough that every slot can reach
+        ``max_seq`` — no preemption pressure; smaller pools exercise
+        evict + requeue).
+    scheduler:
+        admission/preemption policy — a registry name (``"fifo"``,
+        ``"sjf"``, ``"priority"``; see ``serving/scheduler.py``) or a
+        ``Scheduler`` instance.
+    allocator:
+        which ``core/memory/manager.py`` policy hands out blocks:
+        ``"caching"`` (recycles freed blocks) or ``"bump"`` (never
+        reuses — the lower-bound baseline).
+    prefill_chunk:
+        prompt tokens consumed per jitted prefill call (chunked batched
+        prefill); ``0`` falls back to the legacy one-decode-per-token
+        admission path.
+    """
+
+    cache: str = "dense"
+    block_size: int = 16
+    num_blocks: int | None = None
+    scheduler: Any = "fifo"
+    allocator: str = "caching"
+    prefill_chunk: int = 16
+
+    def replace(self, **kw) -> "ServingPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> dict:
+        sched = self.scheduler
+        if not isinstance(sched, str):
+            sched = getattr(sched, "name", None) or type(sched).__name__
+        return {"cache": self.cache, "block_size": self.block_size,
+                "num_blocks": self.num_blocks, "scheduler": sched,
+                "allocator": self.allocator,
+                "prefill_chunk": self.prefill_chunk}
+
+
 _DTYPE_ALIASES = {
     "f32": "float32", "fp32": "float32", "float32": "float32",
     "f16": "float16", "fp16": "float16", "float16": "float16",

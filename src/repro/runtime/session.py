@@ -17,7 +17,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Any
 
-from .policies import KernelOverrides, PrecisionPolicy
+from .policies import KernelOverrides, PrecisionPolicy, ServingPolicy
 
 # Default mesh-axis candidates for the activation batch dimension; matches
 # the historical sharding/context.py default.
@@ -41,8 +41,9 @@ class Session:
         the rules object (``sharding.rules.make_rules(...)``) the mesh
         was planned with; carried for provenance and so layers can reach
         rule-derived facts without replumbing.
-    kernels / precision:
-        see :class:`KernelOverrides` / :class:`PrecisionPolicy`.
+    kernels / precision / serving:
+        see :class:`KernelOverrides` / :class:`PrecisionPolicy` /
+        :class:`ServingPolicy`.
     memory:
         a ``MemoryManagerAdapter`` (host-side pool / trace-replay policy
         under study) or None.
@@ -56,6 +57,7 @@ class Session:
     sharding_rules: Any = None
     kernels: KernelOverrides = field(default_factory=KernelOverrides)
     precision: PrecisionPolicy = field(default_factory=PrecisionPolicy)
+    serving: ServingPolicy = field(default_factory=ServingPolicy)
     memory: Any = None
     tag: str = ""
 
@@ -63,7 +65,8 @@ class Session:
         if self.batch_axes is not None:
             object.__setattr__(self, "batch_axes", tuple(self.batch_axes))
         for name, cls in (("kernels", KernelOverrides),
-                          ("precision", PrecisionPolicy)):
+                          ("precision", PrecisionPolicy),
+                          ("serving", ServingPolicy)):
             val = getattr(self, name)
             if isinstance(val, dict):
                 object.__setattr__(self, name, cls(**val))
@@ -72,7 +75,7 @@ class Session:
     def replace(self, **overrides) -> "Session":
         """A derived session; nested fields accept dicts of overrides:
         ``s.replace(kernels={"matmul": fn})`` keeps the other kernels."""
-        for name in ("kernels", "precision"):
+        for name in ("kernels", "precision", "serving"):
             val = overrides.get(name)
             if isinstance(val, dict):
                 overrides[name] = getattr(self, name).replace(**val)
@@ -123,6 +126,7 @@ class Session:
             "sharding_rules": rules,
             "kernels": self.kernels.describe(),
             "precision": self.precision.describe(),
+            "serving": self.serving.describe(),
             "memory": memory,
             "tag": self.tag,
         }

@@ -1,4 +1,10 @@
 from .decode_attention import make_flash_decode_attend
 from .engine import Request, ServeEngine
+from .kv_cache import BlockTable, OutOfMemory, PagedKVCache
+from .scheduler import (FifoScheduler, PriorityScheduler, Scheduler,
+                        ShortestPromptScheduler, make_scheduler)
 
-__all__ = ["make_flash_decode_attend", "Request", "ServeEngine"]
+__all__ = ["make_flash_decode_attend", "Request", "ServeEngine",
+           "BlockTable", "PagedKVCache", "OutOfMemory", "Scheduler",
+           "FifoScheduler", "ShortestPromptScheduler", "PriorityScheduler",
+           "make_scheduler"]

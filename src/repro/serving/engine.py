@@ -1,21 +1,42 @@
-"""Batched serving engine: continuous-batching-lite over a static slot pool.
+"""Batched serving engine: continuous batching over a static slot pool,
+with a paged KV-cache runtime behind it.
 
-Requests join a waiting queue; free cache slots are assigned per step
-(static shapes — TPU-friendly), prefill runs per-request, then all active
-slots advance one token per ``decode`` call at their *own* position
-(slots admitted mid-flight decode at different depths).  Finished slots
-(EOS or max-tokens) are returned and recycled.  This is the serving
-counterpart of the train loop and the driver behind examples/serve_lm.py.
+Requests join a pluggable :mod:`scheduler <repro.serving.scheduler>`;
+free cache slots are assigned per step in ascending order (deterministic
+traces, static shapes — TPU-friendly).  Admission runs *chunked batched
+prefill*: one jitted ``prefill_step`` call consumes a whole chunk of
+prompt tokens for every newly admitted slot at once, so a length-L
+prompt costs O(L / chunk) compiled calls instead of the O(L) one-token
+decodes of the legacy path (kept as a fallback for MLA models, or
+``prefill_chunk=0``).  All active slots then advance one token per
+``decode`` call at their *own* position.
+
+Cache layouts (``ServingPolicy.cache``):
+
+* ``"dense"`` — every slot statically reserves ``max_seq`` positions
+  per layer (the compatibility path).
+* ``"paged"`` — global-attention layers share a fixed pool of
+  fixed-size blocks mapped through per-slot block tables
+  (:class:`~repro.serving.kv_cache.PagedKVCache`); block allocation is
+  delegated to the ``core/memory/manager.py`` allocator policies.  When
+  the pool runs dry, the scheduler picks a victim to evict — its blocks
+  are freed and the request is requeued (recomputed on re-admission).
 
 The engine reads its scoped configuration from the unified runtime
-Session: construct it inside ``repro.session(kernels={"decode_attention":
-...}, ...)`` to swap the cache-attention kernel (e.g. flash-decoding over
-a sequence-sharded cache); the session is snapshotted at construction so
+Session (kernel overrides, and ``Session.serving`` for the default
+``ServingPolicy``); the session is snapshotted at construction so
 ``engine.session.describe()`` records the serving scenario's provenance.
+
+Models whose layers carry SSM recurrent state (mamba/jamba families)
+are rejected at construction: staggered per-slot admission advances the
+shared recurrence at the wrong times and silently corrupts every other
+in-flight sequence — they need batch-level bulk prefill, which this
+slot-granular engine does not do.
 """
 
 from __future__ import annotations
 
+import time
 import warnings
 from dataclasses import dataclass, field
 
@@ -23,8 +44,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime import current_session
+from repro.runtime import ServingPolicy, current_session
 from repro.runtime import stack as _rt
+
+from .kv_cache import OutOfMemory, PagedKVCache
+from .scheduler import make_scheduler
 
 
 @dataclass
@@ -33,71 +57,229 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: int | None = None
+    priority: int = 0                 # higher = more important (scheduler)
+    deadline: float | None = None     # smaller = more urgent (scheduler)
     generated: list[int] = field(default_factory=list)
     done: bool = False
+    # engine-maintained bookkeeping
+    submit_time: float = 0.0
+    first_token_time: float | None = None
+    admit_seq: int = -1               # admission order (victim selection)
+    preemptions: int = 0
 
 
 class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int, max_seq: int,
-                 attend_fn=None):
+                 policy: ServingPolicy | None = None, attend_fn=None):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.session = current_session()
+        self.policy = policy if policy is not None else self.session.serving
+        if self.policy is not self.session.serving:
+            # describe() must record the scenario that actually runs
+            self.session = self.session.replace(serving=self.policy)
         if attend_fn is not None:
             warnings.warn(
                 "ServeEngine(attend_fn=...) is deprecated; construct the "
                 "engine inside repro.session(kernels={'decode_attention': "
                 "fn}) instead", DeprecationWarning, stacklevel=2)
         self.attend_fn = attend_fn or self.session.kernels.decode_attention
+
+        # SSM-family caches are recurrent state, not position-addressed:
+        # a prefill loop advances EVERY slot's recurrence, so staggered
+        # (mid-flight) admission silently corrupts other sequences, and a
+        # recycled slot inherits its previous occupant's state.  Allow
+        # only the safe case (one pristine-slot admission into an
+        # otherwise-idle engine) and raise loudly on the rest.
+        self._recurrent = getattr(model, "has_recurrent_state",
+                                  lambda: False)()
+        self._slots_used: set[int] = set()
+
+        self.paged = self.policy.cache == "paged"
+        if self.policy.cache not in ("dense", "paged"):
+            raise ValueError(f"unknown cache layout {self.policy.cache!r}")
+        if self.paged:
+            if not getattr(model, "supports_paged_cache", lambda: False)():
+                raise ValueError(
+                    "this model does not support the paged KV cache "
+                    "(MLA latent caches are dense-only for now); use "
+                    "ServingPolicy(cache='dense')")
+            self.kv = PagedKVCache(model, slots=batch_slots, max_seq=max_seq,
+                                   block_size=self.policy.block_size,
+                                   num_blocks=self.policy.num_blocks,
+                                   manager=self.policy.allocator)
+            self.cache = self.kv.pools
+        else:
+            self.kv = None
+            self.cache = model.init_cache(batch_slots, max_seq)
+
+        self._chunked = (self.policy.prefill_chunk > 0 and getattr(
+            model, "supports_chunked_prefill", lambda: False)())
+        self.scheduler = make_scheduler(self.policy.scheduler)
         self._decode = jax.jit(self._decode_fn)
-        self.waiting: list[Request] = []
+        self._prefill = jax.jit(self._prefill_fn) if self._chunked else None
         self.active: dict[int, Request] = {}     # slot -> request
         self.slot_pos = np.zeros(batch_slots, np.int32)
         self.slot_tok = np.zeros((batch_slots, 1), np.int32)
-        self.cache = model.init_cache(batch_slots, max_seq)
         self.steps = 0
+        self.decode_calls = 0
+        self.prefill_calls = 0
+        self.preemptions = 0
+        self._admit_counter = 0
 
-    def _decode_fn(self, params, cache, tok, pos):
+    # -- jitted bodies -------------------------------------------------------
+    def _decode_fn(self, params, cache, tok, pos, block_table):
         # pin the construction-time session during tracing: whatever is
         # ambient when jit first traces must not leak into the compiled
         # decode (describe() provenance has to match actual behavior)
         with _rt.session(self.session):
-            logits, cache = self.model.decode_step(
-                params, cache, tok, pos, attend_fn=self.attend_fn)
+            if block_table is None:
+                logits, cache = self.model.decode_step(
+                    params, cache, tok, pos, attend_fn=self.attend_fn)
+            else:
+                logits, cache = self.model.decode_step(
+                    params, cache, tok, pos, attend_fn=self.attend_fn,
+                    block_table=block_table)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok[:, None], cache
 
+    def _prefill_fn(self, params, cache, toks, start, count, block_table):
+        with _rt.session(self.session):
+            return self.model.prefill_step(params, cache, toks, start,
+                                           count, block_table=block_table)
+
+    def _block_table(self):
+        return self.kv.device_table() if self.paged else None
+
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.waiting.append(req)
+        req.submit_time = time.time()
+        self.scheduler.submit(req)
+
+    @property
+    def waiting(self) -> int:
+        """Requests queued in the scheduler (not yet admitted)."""
+        return len(self.scheduler)
 
     def _admit(self) -> None:
-        free = [s for s in range(self.slots) if s not in self.active]
-        while free and self.waiting:
-            slot = free.pop()
-            req = self.waiting.pop(0)
-            self._prefill_into_slot(slot, req)
+        free = sorted(s for s in range(self.slots) if s not in self.active)
+        admitted: list[tuple[int, Request, list[int]]] = []
+        while free:
+            req = self.scheduler.pop()
+            if req is None:
+                break
+            slot = free.pop(0)                      # ascending: determinism
+            if self._recurrent and (self.active or slot in self._slots_used):
+                raise ValueError(
+                    "SSM-family models carry recurrent state: admitting "
+                    "request %d %s would advance the shared recurrence at "
+                    "the wrong times and silently corrupt decoding; SSM "
+                    "serving supports one request per pristine slot at a "
+                    "time (use batch-level bulk prefill — model.prefill — "
+                    "for concurrent SSM workloads)" % (
+                        req.uid, "mid-flight" if self.active
+                        else f"into recycled slot {slot}"))
+            self._slots_used.add(slot)
+            # a preempted request resumes from prompt + tokens so far
+            eff = req.prompt + req.generated
+            if len(eff) - 1 >= self.max_seq:
+                raise ValueError(
+                    f"request {req.uid} prompt ({len(eff)} tokens) does "
+                    f"not fit max_seq={self.max_seq}; requeueing would "
+                    "spin forever")
+            if self.paged:
+                if self.kv.blocks_for(len(eff) - 1) > self.kv.usable_blocks:
+                    raise OutOfMemory(
+                        f"request {req.uid} needs more KV blocks than the "
+                        f"whole pool holds ({self.kv.usable_blocks} usable "
+                        f"blocks of {self.kv.block_size} positions)")
+                try:
+                    self.kv.ensure(slot, len(eff) - 1)
+                except OutOfMemory:
+                    # pool dry: roll back any partial allocation and wait
+                    # for active slots to finish (or get evicted later)
+                    self.kv.release(slot)
+                    self.scheduler.requeue(req)
+                    break
+            req.admit_seq = self._admit_counter
+            self._admit_counter += 1
             self.active[slot] = req
+            self.slot_pos[slot] = len(eff) - 1
+            self.slot_tok[slot, 0] = eff[-1]
+            admitted.append((slot, req, eff))
+        if admitted:
+            if self._chunked:
+                self._prefill_chunked(admitted)
+            else:
+                for slot, _req, eff in admitted:
+                    self._prefill_per_token(slot, eff)
 
-    def _prefill_into_slot(self, slot: int, req: Request) -> None:
-        # Per-request prefill: feed prompt tokens through decode steps.
-        # Other slots are fed their own current (token, position), so their
-        # cache writes land where the next decode step would write the
-        # identical values — idempotent for position-addressed attention
-        # caches.  (SSM-state layers advance their recurrence on every
-        # call, so staggered admission needs a batch-level bulk prefill
-        # for SSM families — same limitation as before.)
-        for i, tok in enumerate(req.prompt[:-1]):
-            t = self.slot_tok.copy()
-            t[slot, 0] = tok
-            p = self.slot_pos.copy()
-            p[slot] = i
+    def _prefill_chunked(self, admitted) -> None:
+        """All newly admitted slots prefill together, one jitted call per
+        chunk: ceil(max_prompt_len / chunk) calls per admission round."""
+        t = self.policy.prefill_chunk
+        longest = max(len(eff) - 1 for _s, _r, eff in admitted)
+        bt = self._block_table()
+        for c in range(0, longest, t):
+            toks = np.zeros((self.slots, t), np.int32)
+            start = np.zeros(self.slots, np.int32)
+            count = np.zeros(self.slots, np.int32)
+            for slot, _req, eff in admitted:
+                seg = eff[:-1][c:c + t]
+                if not seg:
+                    continue
+                toks[slot, :len(seg)] = seg
+                start[slot] = c
+                count[slot] = len(seg)
+            self.cache = self._prefill(self.params, self.cache,
+                                       jnp.asarray(toks), jnp.asarray(start),
+                                       jnp.asarray(count), bt)
+            self.prefill_calls += 1
+
+    def _prefill_per_token(self, slot: int, eff: list[int]) -> None:
+        # Legacy fallback (MLA / prefill_chunk=0): feed prompt tokens
+        # through decode steps.  Other slots are fed their own current
+        # (token, position), so their cache writes land where the next
+        # decode step would write the identical values — idempotent for
+        # position-addressed attention caches.
+        bt = self._block_table()
+        for i, tok in enumerate(eff[:-1]):
+            tkn = self.slot_tok.copy()
+            tkn[slot, 0] = tok
+            pos = self.slot_pos.copy()
+            pos[slot] = i
             _, self.cache = self._decode(self.params, self.cache,
-                                         jnp.asarray(t), jnp.asarray(p))
-        self.slot_pos[slot] = len(req.prompt) - 1
-        self.slot_tok[slot, 0] = req.prompt[-1]
+                                         jnp.asarray(tkn), jnp.asarray(pos),
+                                         bt)
+            self.prefill_calls += 1
+
+    # -- preemption ----------------------------------------------------------
+    def _preempt(self, slot: int) -> None:
+        req = self.active.pop(slot)
+        req.preemptions += 1
+        self.preemptions += 1
+        self.kv.release(slot)
+        self.scheduler.requeue(req)
+
+    def _ensure_capacity(self) -> None:
+        """Paged mode: every active slot must be able to write its next
+        position; when the pool runs dry, evict scheduler-chosen victims
+        (their blocks free, the requests requeue and recompute later)."""
+        for slot in sorted(self.active):
+            while slot in self.active:
+                try:
+                    self.kv.ensure(slot, int(self.slot_pos[slot]))
+                    break
+                except OutOfMemory:
+                    others = {s: r for s, r in self.active.items()
+                              if s != slot}
+                    if not others:
+                        # this request alone exhausts the pool
+                        self._preempt(slot)
+                        raise
+                    self._preempt(self.scheduler.choose_victim(others))
 
     # -- stepping ---------------------------------------------------------------
     def step(self) -> list[Request]:
@@ -105,15 +287,23 @@ class ServeEngine:
         self._admit()
         if not self.active:
             return []
+        if self.paged:
+            self._ensure_capacity()
+            if not self.active:
+                return []
         tok = jnp.asarray(self.slot_tok)
         pos = jnp.asarray(self.slot_pos)                 # per-slot positions
         next_tok, self.cache = self._decode(self.params, self.cache, tok,
-                                            pos)
+                                            pos, self._block_table())
+        self.decode_calls += 1
         next_np = np.asarray(next_tok)
+        now = time.time()
         finished = []
         for slot, req in list(self.active.items()):
             t = int(next_np[slot, 0])
             req.generated.append(t)
+            if req.first_token_time is None:
+                req.first_token_time = now
             self.slot_tok[slot, 0] = t
             self.slot_pos[slot] += 1
             if ((req.eos_id is not None and t == req.eos_id)
@@ -122,6 +312,8 @@ class ServeEngine:
                 req.done = True
                 finished.append(req)
                 del self.active[slot]
+                if self.paged:
+                    self.kv.release(slot)
         self.steps += 1
         return finished
 
@@ -129,6 +321,19 @@ class ServeEngine:
         out = []
         for _ in range(max_steps):
             out.extend(self.step())
-            if not self.active and not self.waiting:
+            if not self.active and not len(self.scheduler):
                 break
         return out
+
+    # -- provenance ----------------------------------------------------------
+    def describe(self) -> dict:
+        """Serving-scenario snapshot for logs and benchmark provenance."""
+        d = {"session": self.session.describe(),
+             "slots": self.slots, "max_seq": self.max_seq,
+             "chunked_prefill": self._chunked,
+             "decode_calls": self.decode_calls,
+             "prefill_calls": self.prefill_calls,
+             "preemptions": self.preemptions}
+        if self.paged:
+            d["kv_cache"] = self.kv.describe()
+        return d

@@ -1,0 +1,174 @@
+"""Paged KV cache: fixed-size blocks + per-slot block tables.
+
+Instead of statically reserving a dense ``[slots, max_seq]`` cache per
+layer, global-attention layers share a pool of ``num_blocks`` fixed-size
+blocks; each slot holds a *block table* mapping its logical cache
+positions to physical blocks.  Mixed-length traffic then only pays for
+the positions it actually fills, and the pool (not per-slot reservation)
+caps concurrency.
+
+Block allocation is delegated to the open memory interface
+(``core/memory/manager.py``): the managers the paper studies on recorded
+traces here drive a *live* serving workload — allocator policies
+(caching vs bump, and their fragmentation stats) become swappable
+serving experiments.
+
+Static-shape discipline (TPU/jit): the pool has a fixed block count, the
+table a fixed ``[slots, max_blocks]`` shape, and physical block 0 is a
+reserved *trash* block — unmapped table entries point at it, so idle
+slots' decode writes land harmlessly without dynamic shapes or masking
+inside the jitted step.  Ring-buffer (sliding-window) layer caches are
+already small and fixed per slot, so they stay dense.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.memory.manager import (BumpMemoryManager,
+                                       CachingMemoryManager,
+                                       MemoryManagerAdapter, OutOfMemory)
+
+__all__ = ["BlockTable", "PagedKVCache", "OutOfMemory", "paged_block_bytes"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class BlockTable:
+    """Device-side view of the per-slot block tables.
+
+    ``table``: int32 ``[slots, max_blocks]`` physical block ids (0 = the
+    reserved trash block).  ``block_size`` is static (pytree aux data),
+    so it is a Python int inside jitted code.
+    """
+
+    table: Any
+    block_size: int
+
+    def tree_flatten(self):
+        return (self.table,), self.block_size
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def paged_block_bytes(cfg, block_size: int) -> int:
+    """Bytes one block occupies across every paged (global-attention)
+    layer — the allocation unit handed to the memory manager."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    n_global = sum(1 for i in range(cfg.n_layers)
+                   if cfg.layer_kind(i) == "A"
+                   and cfg.window_for_layer(i) == 0)
+    item = jnp.dtype(cfg.resolved_cache_dtype).itemsize
+    per_pos = 2 * kv * hd * item                    # k + v
+    if cfg.cache_dtype == "fp8":
+        per_pos += 2 * kv * 4                       # float32 scales
+    return max(1, n_global * per_pos * block_size)
+
+
+class PagedKVCache:
+    """Host-side block-table + pool manager for one ``ServeEngine``.
+
+    The device pools live in ``self.pools`` (the model's paged cache
+    pytree — per-layer ``[num_blocks * block_size, ...]`` arrays, shared
+    across slots).  This object owns the host block tables and talks to
+    the allocator; the jitted decode/prefill steps only ever see the
+    pools plus a :class:`BlockTable` snapshot.
+    """
+
+    def __init__(self, model, *, slots: int, max_seq: int, block_size: int,
+                 num_blocks: int | None = None,
+                 manager: MemoryManagerAdapter | str | None = None):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.slots = slots
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.max_blocks = math.ceil(max_seq / block_size)
+        if num_blocks is None:
+            # roomy default: every slot can reach max_seq (+ trash block)
+            num_blocks = slots * self.max_blocks + 1
+        if num_blocks < 2:
+            raise ValueError("num_blocks must be >= 2 (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self.block_bytes = paged_block_bytes(model.cfg, block_size)
+        if manager is None or isinstance(manager, str):
+            make = {None: CachingMemoryManager, "caching": CachingMemoryManager,
+                    "bump": BumpMemoryManager}[manager]
+            kw = {} if make is BumpMemoryManager else \
+                {"round_to": self.block_bytes}
+            manager = make(capacity=num_blocks * self.block_bytes, **kw)
+        self.manager = manager
+        self.pools = model.init_paged_cache(slots, max_seq,
+                                            num_blocks=num_blocks,
+                                            block_size=block_size)
+        self.table = np.zeros((slots, self.max_blocks), np.int32)
+        self._blocks: dict[int, list[tuple[int, int]]] = {}  # slot -> [(id, ptr)]
+        # reserve physical block 0 as the trash block, never freed
+        ptr0 = self.manager.alloc(self.block_bytes)
+        if ptr0 // self.block_bytes != 0:
+            raise ValueError(
+                "paged KV cache needs a fresh block-aligned arena (the "
+                "offset->block-id mapping requires every allocation to be "
+                f"a block_bytes={self.block_bytes} multiple); got first "
+                f"offset {ptr0}")
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1          # minus the trash block
+
+    @property
+    def blocks_in_use(self) -> int:
+        return sum(len(v) for v in self._blocks.values())
+
+    def blocks_for(self, pos: int) -> int:
+        """Blocks a slot needs so position ``pos`` is writable."""
+        return pos // self.block_size + 1
+
+    # -- slot lifecycle ------------------------------------------------------
+    def ensure(self, slot: int, pos: int) -> None:
+        """Map enough blocks that ``pos`` is writable for ``slot``.
+
+        Raises :class:`OutOfMemory` when the allocator cannot satisfy the
+        growth — the engine's preemption trigger.
+        """
+        need = self.blocks_for(pos)
+        if need > self.max_blocks:
+            raise OutOfMemory(
+                f"position {pos} exceeds max_seq={self.max_seq} "
+                f"({self.max_blocks} blocks/slot)")
+        held = self._blocks.setdefault(slot, [])
+        while len(held) < need:
+            ptr = self.manager.alloc(self.block_bytes)
+            bid = ptr // self.block_bytes
+            self.table[slot, len(held)] = bid
+            held.append((bid, ptr))
+
+    def release(self, slot: int) -> None:
+        """Free every block a slot holds (request finished or evicted)."""
+        for _bid, ptr in self._blocks.pop(slot, []):
+            self.manager.unlock(ptr)
+        self.table[slot] = 0
+
+    # -- device views --------------------------------------------------------
+    def device_table(self) -> BlockTable:
+        return BlockTable(jnp.asarray(self.table), self.block_size)
+
+    def describe(self) -> dict:
+        s = self.manager.stats
+        return {"block_size": self.block_size,
+                "num_blocks": self.num_blocks,
+                "max_blocks_per_slot": self.max_blocks,
+                "block_bytes": self.block_bytes,
+                "blocks_in_use": self.blocks_in_use,
+                "manager": type(self.manager).__name__,
+                "device_allocs": s.n_device_allocs,
+                "internal_fragmentation": s.internal_fragmentation}

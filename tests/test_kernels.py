@@ -105,6 +105,28 @@ def test_flash_decode_sweep(s, d, valid_len, bk, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+def test_flash_decode_per_row_valid():
+    """Paged/continuous-batching path: every row carries its own valid
+    mask (slots decode at different depths; gathered block-table views
+    have per-slot lengths)."""
+    n, s, d, bk = 5, 256, 64, 64
+    q = _rand((n, d), jnp.float32)
+    k = _rand((n, s, d), jnp.float32)
+    v = _rand((n, s, d), jnp.float32)
+    lens = jnp.asarray([1, 64, 100, 200, 256])
+    valid = jnp.arange(s)[None, :] < lens[:, None]           # [N, S]
+    out = K.flash_decode(q, k, v, valid, bk=bk)
+    ref = R.flash_decode(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_tol(jnp.float32))
+    # per-row result must equal the shared-mask result row-by-row
+    for i, ln in enumerate([1, 64, 100, 200, 256]):
+        shared = K.flash_decode(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                jnp.arange(s) < ln, bk=bk)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]),
+                                   np.asarray(shared), **_tol(jnp.float32))
+
+
 @pytest.mark.parametrize("q,p,n", [(32, 16, 24), (64, 32, 16), (16, 64, 128)])
 def test_ssd_chunk_sweep(q, p, n):
     b, h, nc = 2, 3, 4

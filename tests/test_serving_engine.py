@@ -113,6 +113,20 @@ def test_ambient_session_does_not_leak_into_compiled_decode():
     assert not hits, "ambient session leaked into the compiled decode"
 
 
+def test_admission_assigns_slots_ascending_in_arrival_order():
+    """Queue hygiene: FIFO admission must fill free slots in ascending
+    order (the old engine popped free slots in *descending* order, so
+    traces depended on slot-set iteration quirks)."""
+    model, params = _tiny_model()
+    eng = ServeEngine(model, params, batch_slots=3, max_seq=16)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=[uid + 1, 2], max_new_tokens=4))
+    eng.step()
+    assert {slot: r.uid for slot, r in eng.active.items()} == {0: 0, 1: 1,
+                                                               2: 2}
+    assert eng.waiting == 0
+
+
 def test_engine_attend_fn_kwarg_deprecated():
     model, params = _tiny_model()
     with pytest.deprecated_call():

@@ -1,0 +1,358 @@
+"""Paged KV-cache serving runtime: block-table cache correctness (paged
+must be token-for-token identical to dense under staggered mixed-length
+admissions), chunked-prefill call counts, preemption-on-OOM, schedulers,
+and the ServingPolicy provenance plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.runtime import ServingPolicy
+from repro.serving import (BlockTable, FifoScheduler, PagedKVCache,
+                           PriorityScheduler, Request, ServeEngine,
+                           ShortestPromptScheduler, make_scheduler)
+from repro.serving.kv_cache import OutOfMemory
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("codeqwen1.5-7b", reduced=True, n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _run_staggered(model, params, policy, prompts, max_new=8, slots=2,
+                   max_seq=32):
+    eng = ServeEngine(model, params, batch_slots=slots, max_seq=max_seq,
+                      policy=policy)
+    eng.submit(Request(uid=0, prompt=list(prompts[0]), max_new_tokens=max_new))
+    eng.submit(Request(uid=1, prompt=list(prompts[1]), max_new_tokens=max_new))
+    eng.step()
+    eng.step()
+    # slots now sit at different depths; admit the rest mid-flight
+    for uid, p in enumerate(prompts[2:], start=2):
+        eng.submit(Request(uid=uid, prompt=list(p), max_new_tokens=max_new))
+    done = {r.uid: r.generated for r in eng.run_until_done()}
+    return done, eng
+
+
+PROMPTS = [[3, 1, 4, 1, 5], [9, 2], [5, 3, 5, 8, 9, 7, 2], [2, 7, 1, 8]]
+
+
+def test_paged_matches_dense_on_staggered_mixed_lengths(tiny):
+    """The tentpole regression: the paged engine must be token-for-token
+    identical to the dense engine on staggered mixed-length admissions
+    (same chunked prefill, reads through the block table)."""
+    model, params = tiny
+    dense, _ = _run_staggered(
+        model, params, ServingPolicy(cache="dense", prefill_chunk=4), PROMPTS)
+    paged, ep = _run_staggered(
+        model, params,
+        ServingPolicy(cache="paged", block_size=4, prefill_chunk=4), PROMPTS)
+    assert set(dense) == set(paged) == {0, 1, 2, 3}
+    for uid in dense:
+        assert dense[uid] == paged[uid], (
+            f"request {uid} diverged under paging: "
+            f"{paged[uid]} != {dense[uid]}")
+    assert ep.kv.blocks_in_use == 0          # everything released
+
+
+def test_paged_matches_dense_on_window_model():
+    """Ring-buffer (sliding-window) layers stay dense inside the paged
+    engine and must still agree with the all-dense engine — including a
+    prompt longer than the window (ring wraps during chunked prefill)."""
+    cfg = get_config("gemma3-27b", reduced=True)   # window 16 interleave
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [[3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7, 9, 3, 2, 3, 8, 4],
+               [9, 2], [5, 3, 5, 8, 9, 7, 2, 11]]
+    dense, _ = _run_staggered(
+        model, params, ServingPolicy(cache="dense", prefill_chunk=5),
+        prompts, max_new=6, max_seq=48)
+    paged, _ = _run_staggered(
+        model, params,
+        ServingPolicy(cache="paged", block_size=8, prefill_chunk=5),
+        prompts, max_new=6, max_seq=48)
+    assert dense == paged
+
+
+def test_chunked_prefill_reduces_jitted_calls(tiny):
+    """A length-L prompt must cost ceil((L-1)/chunk) prefill calls, not
+    L-1 one-token decodes (the legacy path, kept at prefill_chunk=0)."""
+    model, params = tiny
+    prompt = list(np.arange(1, 14) % 7 + 1)      # L = 13
+    legacy = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                         policy=ServingPolicy(prefill_chunk=0))
+    legacy.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=2))
+    legacy.run_until_done()
+    assert legacy.prefill_calls == len(prompt) - 1
+    chunked = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                          policy=ServingPolicy(prefill_chunk=4))
+    chunked.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=2))
+    done = chunked.run_until_done()
+    assert chunked.prefill_calls == 3            # ceil(12 / 4)
+    # and the two admission paths generate identical tokens
+    legacy2 = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                          policy=ServingPolicy(prefill_chunk=0))
+    legacy2.submit(Request(uid=1, prompt=list(prompt), max_new_tokens=2))
+    done2 = legacy2.run_until_done()
+    assert done[0].generated == done2[0].generated
+
+
+def test_preemption_evicts_requeues_and_recomputes(tiny):
+    """When the block pool runs dry mid-decode, the scheduler's victim is
+    evicted (blocks freed, request requeued) and later recomputed —
+    output identical to an uncontended run."""
+    model, params = tiny
+    prompts = [[3, 1, 4, 1, 5, 9], [9, 2, 6, 5, 3, 5]]
+
+    def solo(uid):
+        eng = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                          policy=ServingPolicy(prefill_chunk=4))
+        eng.submit(Request(uid=uid, prompt=list(prompts[uid]),
+                           max_new_tokens=12))
+        (r,) = eng.run_until_done()
+        return r.generated
+
+    ref = {u: solo(u) for u in range(2)}
+    # 6 usable blocks of 4 positions; both requests grow to 18 positions
+    # (5 blocks each) -> the pool must run dry and evict
+    pol = ServingPolicy(cache="paged", block_size=4, num_blocks=7,
+                        prefill_chunk=4)
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=32, policy=pol)
+    for u, p in enumerate(prompts):
+        eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=12))
+    done = {r.uid: r.generated for r in eng.run_until_done()}
+    assert eng.preemptions > 0
+    assert done == ref
+    assert eng.kv.blocks_in_use == 0
+
+
+def test_admission_rejects_request_larger_than_pool(tiny):
+    model, params = tiny
+    pol = ServingPolicy(cache="paged", block_size=4, num_blocks=3,
+                        prefill_chunk=4)
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=32, policy=pol)
+    # needs ceil(12/4)=3 blocks; pool has 2 usable
+    eng.submit(Request(uid=0, prompt=list(range(1, 13)), max_new_tokens=2))
+    with pytest.raises(OutOfMemory):
+        eng.run_until_done()
+
+
+def test_admission_rejects_prompt_beyond_max_seq(tiny):
+    """A prompt that cannot fit max_seq must raise, not requeue forever
+    (the paged per-slot block cap is unreachable for such prompts, so
+    without the guard run_until_done spins to max_steps)."""
+    model, params = tiny
+    for pol in (ServingPolicy(cache="dense", prefill_chunk=4),
+                ServingPolicy(cache="paged", block_size=4, prefill_chunk=4)):
+        eng = ServeEngine(model, params, batch_slots=2, max_seq=16,
+                          policy=pol)
+        eng.submit(Request(uid=0, prompt=list((i % 7) + 1
+                                              for i in range(24)),
+                           max_new_tokens=2))
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.run_until_done()
+
+
+def test_engine_detects_ssm_staggered_admission_corruption():
+    """Regression for the documented corruption: a prefill loop advances
+    SSM recurrent state for EVERY slot, so admitting a request while
+    another is mid-flight (or into a recycled slot) must raise instead
+    of silently corrupting — the safe single-request case keeps working
+    (see test_distributed.test_serve_engine_greedy_matches_manual_decode).
+    """
+    cfg = get_config("mamba2-370m", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # staggered: second request would be admitted while the first decodes
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=16)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    eng.step()
+    eng.submit(Request(uid=1, prompt=[4, 5], max_new_tokens=4))
+    with pytest.raises(ValueError, match="recurren"):
+        eng.run_until_done()
+    # recycled slot: admission after the first finished must also raise
+    eng2 = ServeEngine(model, params, batch_slots=1, max_seq=16)
+    eng2.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    eng2.run_until_done()
+    eng2.submit(Request(uid=1, prompt=[4, 5], max_new_tokens=2))
+    with pytest.raises(ValueError, match="recycled"):
+        eng2.run_until_done()
+    # paged layout is meaningless for recurrent state: refuse up front
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, params, batch_slots=1, max_seq=16,
+                    policy=ServingPolicy(cache="paged"))
+
+
+def test_paged_rejects_mla_models():
+    cfg = get_config("deepseek-v2-lite-16b", reduced=True, moe_impl="dense")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, params, batch_slots=1, max_seq=16,
+                    policy=ServingPolicy(cache="paged"))
+    # dense MLA serving still works (legacy per-token prefill)
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=16)
+    assert not eng._chunked
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    (done,) = eng.run_until_done()
+    assert len(done.generated) == 2
+
+
+def test_fp8_paged_serving_smoke():
+    """fp8 paged cache: scales ride along in the block pool; greedy
+    decode agrees between dense-fp8 and paged-fp8."""
+    cfg = get_config("codeqwen1.5-7b", reduced=True, n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                     cache_dtype="fp8")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dense, _ = _run_staggered(
+        model, params, ServingPolicy(cache="dense", prefill_chunk=4),
+        PROMPTS[:3], max_new=5)
+    paged, _ = _run_staggered(
+        model, params,
+        ServingPolicy(cache="paged", block_size=4, prefill_chunk=4),
+        PROMPTS[:3], max_new=5)
+    assert dense == paged
+
+
+# -- schedulers --------------------------------------------------------------
+
+def _reqs(lengths, **kw):
+    return [Request(uid=i, prompt=list(range(1, n + 1)), **kw)
+            for i, n in enumerate(lengths)]
+
+
+def test_fifo_scheduler_order_and_requeue():
+    s = FifoScheduler()
+    a, b, c = _reqs([3, 1, 2])
+    for r in (a, b, c):
+        s.submit(r)
+    assert s.pop() is a
+    s.requeue(a)                       # preempted: back to the front
+    assert s.pop() is a
+    assert s.pop() is b
+    assert len(s) == 1
+
+
+def test_shortest_prompt_scheduler_orders_by_length():
+    s = ShortestPromptScheduler()
+    reqs = _reqs([5, 2, 7, 3])
+    for r in reqs:
+        s.submit(r)
+    order = [s.pop().uid for _ in range(4)]
+    assert order == [1, 3, 0, 2]
+    # a preempted request re-sorts with its grown effective prompt
+    grown = reqs[1]
+    grown.generated = [9] * 10
+    s.submit(reqs[0])
+    s.requeue(grown)
+    assert s.pop() is reqs[0]
+
+
+def test_priority_scheduler_priority_then_deadline():
+    s = PriorityScheduler()
+    lo = Request(uid=0, prompt=[1], priority=0)
+    hi = Request(uid=1, prompt=[1], priority=5)
+    soon = Request(uid=2, prompt=[1], priority=5, deadline=1.0)
+    for r in (lo, hi, soon):
+        s.submit(r)
+    assert s.pop() is soon             # same priority, earlier deadline
+    assert s.pop() is hi
+    assert s.pop() is lo
+    # victim: least important active request ...
+    lo.admit_seq, hi.admit_seq = 0, 1
+    assert s.choose_victim({3: lo, 4: hi}) == 3
+    # ... and among equal priorities, the most relaxed deadline loses,
+    # never the most urgent request
+    urgent = Request(uid=3, prompt=[1], priority=2, deadline=1.0)
+    relaxed = Request(uid=4, prompt=[1], priority=2, deadline=100.0)
+    urgent.admit_seq, relaxed.admit_seq = 0, 1
+    assert s.choose_victim({5: urgent, 6: relaxed}) == 6
+    # no deadlines: evict the youngest admission (least progress wasted)
+    a = Request(uid=5, prompt=[1], priority=1)
+    b = Request(uid=6, prompt=[1], priority=1)
+    a.admit_seq, b.admit_seq = 0, 1
+    assert s.choose_victim({7: a, 8: b}) == 8
+
+
+def test_make_scheduler_registry():
+    assert isinstance(make_scheduler("fifo"), FifoScheduler)
+    assert isinstance(make_scheduler("sjf"), ShortestPromptScheduler)
+    assert isinstance(make_scheduler("priority"), PriorityScheduler)
+    inst = PriorityScheduler()
+    assert make_scheduler(inst) is inst
+    with pytest.raises(ValueError):
+        make_scheduler("lifo")
+
+
+def test_sjf_policy_through_engine(tiny):
+    """Scheduler is a live policy: with one slot, SJF admits the shortest
+    waiting prompt first regardless of arrival order."""
+    model, params = tiny
+    eng = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                      policy=ServingPolicy(scheduler="sjf", prefill_chunk=4))
+    eng.submit(Request(uid=0, prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=2))
+    eng.submit(Request(uid=1, prompt=[7, 8], max_new_tokens=2))
+    done = eng.run_until_done()
+    assert [r.uid for r in done] == [1, 0]
+
+
+# -- block-table / pool machinery --------------------------------------------
+
+def test_block_table_is_a_jit_stable_pytree():
+    bt = BlockTable(jnp.arange(6, dtype=jnp.int32).reshape(2, 3), 4)
+
+    @jax.jit
+    def phys(bt):
+        return bt.table * bt.block_size
+
+    out = phys(bt)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.arange(6).reshape(2, 3) * 4)
+    leaves, treedef = jax.tree_util.tree_flatten(bt)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.block_size == 4
+
+
+def test_paged_kv_cache_allocator_accounting(tiny):
+    model, _ = tiny
+    kv = PagedKVCache(model, slots=2, max_seq=32, block_size=4)
+    assert kv.usable_blocks == 2 * 8      # slots * ceil(32/4)
+    kv.ensure(0, 9)                       # positions 0..9 -> 3 blocks
+    assert kv.blocks_in_use == 3
+    assert (kv.table[0, :3] > 0).all()    # mapped, never the trash block
+    assert (kv.table[0, 3:] == 0).all()
+    devalloc_before = kv.manager.stats.n_device_allocs
+    kv.release(0)
+    assert kv.blocks_in_use == 0
+    assert (kv.table[0] == 0).all()
+    kv.ensure(1, 9)                       # caching allocator recycles
+    assert kv.manager.stats.n_device_allocs == devalloc_before
+    with pytest.raises(OutOfMemory):
+        kv.ensure(1, 10_000)              # beyond max_seq
+
+
+def test_serving_policy_lands_in_session_describe(tiny):
+    model, params = tiny
+    pol = ServingPolicy(cache="paged", block_size=8, scheduler="sjf")
+    with repro.session(serving=pol, tag="paged-scenario"):
+        eng = ServeEngine(model, params, batch_slots=1, max_seq=32)
+    d = eng.session.describe()
+    assert d["serving"] == {"cache": "paged", "block_size": 8,
+                            "num_blocks": None, "scheduler": "sjf",
+                            "allocator": "caching", "prefill_chunk": 16}
+    # explicit policy argument overrides the session and is recorded
+    eng2 = ServeEngine(model, params, batch_slots=1, max_seq=32,
+                       policy=ServingPolicy(cache="dense"))
+    assert eng2.session.describe()["serving"]["cache"] == "dense"
+    d2 = eng2.describe()
+    assert d2["slots"] == 1 and "session" in d2
