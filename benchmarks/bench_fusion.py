@@ -1,12 +1,28 @@
-"""Deferred-execution fusion win (the ArrayFire-JIT reproduction, Fig. 2).
+"""Deferred-execution fusion win (the ArrayFire-JIT reproduction, Fig. 2),
+now measured through the ``repro.compiler`` pipeline.
 
-Elementwise chains: eager mode dispatches one XLA call per op; the lazy
-backend builds the graph and evaluates the whole pending subgraph in one
-materialization.  We report dispatch counts and wall time per chain.
+Elementwise chains, three ways:
+ * eager       — one XLA dispatch per op;
+ * lazy legacy — the pre-compiler lazy path (empty pipeline): the graph
+   is captured but evaluated node-at-a-time, one dispatch per node;
+ * compiled    — the full pipeline (cse / fold / dce / fuse) with Pallas
+   cluster lowering: CSE+fusion collapse the chain into generated cluster
+   kernels, and the program cache reuses them across materializations.
+
+Reported per scenario: wall time, dispatched-call counts, generated-kernel
+counts, and per-pass node reductions (the PassManager's own stats).
+
+Run:  PYTHONPATH=src python benchmarks/bench_fusion.py [--quick]
+                       [--out fusion.json] [--n-ops 16] [--iters 20]
+
+The JSON output is uploaded as a CI artifact (next to bench_serving's)
+to start a compiler-perf trajectory across PRs.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -14,50 +30,118 @@ import jax.numpy as jnp
 
 import repro
 from repro.core.tensor import ops
+from repro.runtime import CompilerPolicy
 
 
 def _chain(x, n):
-    for i in range(n):
+    for _ in range(n):
         x = ops.mul(ops.add(x, x), ops.full_like(x, 0.5))
         x = ops.tanh(x)
     return x
 
 
-def run() -> list[tuple[str, float, str]]:
-    rows = []
-    x = jnp.ones((256, 256))
-    n = 16
-
-    # eager
-    out = _chain(x, n)
+def _time(fn, iters):
+    out = fn()                       # warm up (trace/compile/jit)
     jax.block_until_ready(out)
     t0 = time.perf_counter()
-    for _ in range(20):
-        out = _chain(x, n)
+    for _ in range(iters):
+        out = fn()
     jax.block_until_ready(out)
-    t_eager = (time.perf_counter() - t0) / 20
+    return (time.perf_counter() - t0) / iters, out
 
-    # lazy: one materialization per chain, via a session-scoped swap
-    with repro.session(backend="lazy", tag="bench_fusion") as sess:
-        lb = sess.backend_instance()
-        out = ops.materialize(_chain(x, n))
-        n0, m0 = lb.nodes_built, lb.materialize_calls
-        t0 = time.perf_counter()
-        for _ in range(20):
-            out = ops.materialize(_chain(x, n))
-        jax.block_until_ready(out)
-        t_lazy = (time.perf_counter() - t0) / 20
-        built = lb.nodes_built - n0
-        mats = lb.materialize_calls - m0
 
-    rows.append(("fusion_eager_chain_s", t_eager,
-                 f"{3*n} dispatches per chain"))
-    rows.append(("fusion_lazy_chain_s", t_lazy,
-                 f"{built//20} nodes -> {mats//20} materialization(s); "
-                 f"speedup={t_eager/t_lazy:.2f}x"))
-    return rows
+def bench(n_ops: int = 16, iters: int = 20, side: int = 256) -> dict:
+    x = jnp.ones((side, side))
+
+    t_eager, ref = _time(lambda: _chain(x, n_ops), iters)
+
+    def lazy_run(policy):
+        lb_holder = {}
+
+        def run():
+            with repro.session(backend="lazy", compiler=policy,
+                               tag="bench_fusion") as sess:
+                lb = sess.backend_instance()
+                lb_holder["lb"] = lb
+                return ops.materialize(_chain(x, n_ops))
+
+        t, out = _time(run, iters)
+        lb = lb_holder["lb"]
+        return t, out, lb.last_compile_report, lb
+
+    t_legacy, out_legacy, rep_legacy, _ = lazy_run(CompilerPolicy.legacy())
+    t_comp, out_comp, rep_comp, lb = lazy_run(CompilerPolicy())
+
+    import numpy as np
+    exact = bool((np.asarray(out_comp) == np.asarray(ref)).all())
+
+    passes = {p["pass"]: {"nodes_before": p["nodes"][0],
+                          "nodes_after": p["nodes"][1],
+                          "removed": p["nodes"][0] - p["nodes"][1],
+                          **{k: v for k, v in p.items()
+                             if k not in ("pass", "nodes", "edges")}}
+              for p in rep_comp["passes"]}
+    return {
+        "n_ops": 3 * n_ops,
+        "shape": [side, side],
+        "eager_s": t_eager,
+        "lazy_legacy_s": t_legacy,
+        "compiled_s": t_comp,
+        "speedup_vs_eager": t_eager / t_comp,
+        "speedup_vs_legacy": t_legacy / t_comp,
+        "legacy_dispatches": rep_legacy["dispatches"],
+        "compiled_dispatches": rep_comp["dispatches"],
+        "pallas_kernels": rep_comp["pallas_kernels"],
+        "program_cache_hits": lb.program_cache_hits,
+        "numerics_exact_vs_eager": exact,
+        "passes": passes,
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    """CSV rows for benchmarks/run.py."""
+    r = bench()
+    pass_txt = " ".join(
+        f"{name}:{p['nodes_before']}->{p['nodes_after']}"
+        for name, p in r["passes"].items())
+    return [
+        ("fusion_eager_chain_s", r["eager_s"],
+         f"{r['n_ops']} dispatches per chain"),
+        ("fusion_lazy_legacy_chain_s", r["lazy_legacy_s"],
+         f"{r['legacy_dispatches']} dispatches (node-at-a-time)"),
+        ("fusion_compiled_chain_s", r["compiled_s"],
+         f"{r['compiled_dispatches']} dispatch(es), "
+         f"{r['pallas_kernels']} generated kernel(s); "
+         f"passes[{pass_txt}]; "
+         f"exact={r['numerics_exact_vs_eager']}; "
+         f"speedup vs eager={r['speedup_vs_eager']:.2f}x "
+         f"legacy={r['speedup_vs_legacy']:.2f}x"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small chain / few iters; emit JSON for CI")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--n-ops", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args()
+
+    n_ops = args.n_ops or 16
+    iters = args.iters or (5 if args.quick else 20)
+    side = 128 if args.quick else 256
+    result = bench(n_ops=n_ops, iters=iters, side=side)
+    payload = {"bench": "fusion", "quick": args.quick, **result}
+    blob = json.dumps(payload, indent=2, default=str)
+    print(blob)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob)
+    assert result["numerics_exact_vs_eager"], "compiled != eager"
+    assert result["compiled_dispatches"] <= 2, \
+        "pipeline failed to collapse the chain"
 
 
 if __name__ == "__main__":
-    for name, val, derived in run():
-        print(f"{name},{val*1e6:.1f},{derived}")
+    main()

@@ -7,12 +7,25 @@ Top-level API: the unified runtime Session —
         ...
 """
 
-from repro.runtime import (KernelOverrides, PrecisionPolicy, ServingPolicy,
-                           Session, current_session, default_session, session)
+from repro.runtime import (CompilerPolicy, KernelOverrides, PrecisionPolicy,
+                           ServingPolicy, Session, current_session,
+                           default_session, session)
 
 __all__ = [
     "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
+    "CompilerPolicy",
     "session", "current_session", "default_session",
+    "compile",
 ]
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
+
+
+def __getattr__(name):
+    # `repro.compile` resolves lazily (PEP 562) so `import repro` stays
+    # light — the compiler subsystem pulls in Pallas machinery.
+    if name == "compile":
+        from repro.compiler import compile as _compile
+
+        return _compile
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

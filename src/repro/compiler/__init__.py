@@ -1,0 +1,29 @@
+"""repro.compiler — graph IR, pass manager, and Pallas cluster lowering.
+
+The lazy backend's pending-op web, promoted to a first-class compiler
+(paper §4.1.1's ArrayFire-JIT story as an open subsystem):
+
+    trace()        LazyTensor stream  →  explicit SSA-style Graph
+    PassManager    cse / fold / dce / fuse, each reporting node deltas
+    lower()        fused clusters     →  generated Pallas kernels
+                   (interpret off-TPU, per-cluster jit fallback)
+    compile(fn)    the user-facing decorator over the whole pipeline
+
+``repro.session(backend="lazy", compiler=CompilerPolicy(...))`` selects
+the pipeline for every ``materialize``; ``python -m
+repro.compiler.selfcheck`` round-trips the passes over a canned corpus
+and fails on IR invariant violations.
+"""
+
+from repro.runtime import CompilerPolicy
+
+from .api import CompiledFunction, compile, compile_graph, optimize
+from .graph import ELEMENTWISE_OPS, Cluster, Graph, Node, trace
+from .lowering import Executable, lower
+from .passes import PASS_REGISTRY, PassManager, PassStats
+
+__all__ = [
+    "CompilerPolicy", "CompiledFunction", "compile", "compile_graph",
+    "optimize", "Graph", "Node", "Cluster", "trace", "ELEMENTWISE_OPS",
+    "Executable", "lower", "PassManager", "PassStats", "PASS_REGISTRY",
+]

@@ -1,0 +1,318 @@
+"""The compiler's SSA-style graph IR: :class:`Node`, :class:`Graph`, and
+``trace()`` — lifting the lazy backend's pending op stream into an
+inspectable, rewritable program.
+
+The lazy backend (paper §4.1.1, the ArrayFire-JIT analog) always *had* a
+tensor graph; it was just opaque — a web of ``LazyTensor`` closures only
+``materialize`` could walk.  ``trace()`` captures that web as an explicit
+``Graph``: canonically-numbered nodes in topological order, named inputs
+and outputs, per-node op/attrs/shape/dtype metadata, and an ``alias`` map
+recording what rewrites merged away.  Passes (``repro.compiler.passes``)
+rewrite the Graph; lowering (``repro.compiler.lowering``) turns it into an
+executable program of generated cluster kernels and residual op dispatches.
+
+Node kinds:
+
+``input``   a value supplied at execution time (a materialized leaf);
+``const``   a value baked at compile time (created by constant folding);
+anything else: a compute node whose ``fn`` maps input values to the
+            node's value.  ``attrs`` carries the op's static parameters
+            as a hashable tuple; ``attrs is None`` marks the node
+            *opaque* — its closure captures something we cannot compare
+            (e.g. a PRNG key array), so CSE/folding/program-caching must
+            leave it alone.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tensor.lazy_backend import _ELEMENTWISE
+
+#: ops that compute one output element from the matching input elements —
+#: the fusable set (the lazy backend's table is the source of truth).
+ELEMENTWISE_OPS = frozenset(_ELEMENTWISE)
+
+#: ops whose value depends on state we must not deduplicate or precompute.
+IMPURE_OPS = frozenset({"random_uniform", "random_normal"})
+
+
+@dataclass
+class Node:
+    """One SSA value: ``%uid = op(inputs) : dtype[shape]``."""
+
+    uid: int
+    op: str
+    fn: Callable | None
+    inputs: tuple[int, ...]
+    shape: tuple[int, ...]
+    dtype: Any
+    attrs: tuple | None = ()
+    value: Any = None          # concrete array for input/const nodes
+    src_op: str = ""           # original op (survives folding), telemetry tag
+    cluster: int | None = None  # fusion-pass assignment
+
+    def __post_init__(self):
+        if not self.src_op:
+            self.src_op = self.op
+
+    @property
+    def size(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+    def nbytes(self) -> int:
+        return self.size * jnp.dtype(self.dtype).itemsize
+
+    def type_str(self) -> str:
+        return f"{jnp.dtype(self.dtype).name}[{','.join(map(str, self.shape))}]"
+
+
+@dataclass
+class Cluster:
+    """A fusable region found by the fusion pass: executed atomically as
+    one generated kernel."""
+
+    cid: int
+    node_ids: tuple[int, ...]     # members, topo order
+    inputs: tuple[int, ...]       # external producers, first-use order
+    outputs: tuple[int, ...]      # members consumed outside (or graph outputs)
+
+
+@dataclass
+class Graph:
+    """A program over Nodes; insertion order of ``order`` is topological."""
+
+    nodes: dict[int, Node] = field(default_factory=dict)
+    order: list[int] = field(default_factory=list)
+    inputs: tuple[int, ...] = ()
+    outputs: tuple[int, ...] = ()
+    alias: dict[int, int] = field(default_factory=dict)
+    clusters: list[Cluster] = field(default_factory=list)
+
+    # -- bookkeeping --------------------------------------------------------
+    def resolve(self, uid: int) -> int:
+        """Follow the alias chain to the surviving representative."""
+        while uid in self.alias:
+            uid = self.alias[uid]
+        return uid
+
+    def add(self, node: Node) -> Node:
+        self.nodes[node.uid] = node
+        self.order.append(node.uid)
+        return node
+
+    def clear_clusters(self) -> None:
+        """Invalidate the fusion partition (rewriting passes call this —
+        membership/edge metadata would dangle otherwise)."""
+        self.clusters = []
+        for uid in self.order:
+            self.nodes[uid].cluster = None
+
+    def remove(self, uid: int, replacement: int | None = None) -> None:
+        if replacement is not None:
+            self.alias[uid] = replacement
+        del self.nodes[uid]
+        self.order.remove(uid)
+
+    def consumers(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {uid: [] for uid in self.order}
+        for uid in self.order:
+            for d in self.nodes[uid].inputs:
+                out[d].append(uid)
+        return out
+
+    def n_edges(self) -> int:
+        return sum(len(self.nodes[uid].inputs) for uid in self.order)
+
+    def signature(self) -> tuple | None:
+        """Structural identity for program caching; ``None`` if any node
+        is opaque (its behavior is not captured by (op, attrs))."""
+        sig = []
+        for uid in self.order:
+            n = self.nodes[uid]
+            if n.attrs is None:
+                return None
+            sig.append((n.uid, n.op, n.attrs, n.inputs, n.shape,
+                        str(jnp.dtype(n.dtype))))
+        return (tuple(sig), self.inputs, self.outputs)
+
+    # -- verification -------------------------------------------------------
+    def validate(self) -> list[str]:
+        """IR invariants; returns human-readable violations (empty = ok).
+
+        Checked: topo order, dangling deps, orphan outputs, alias
+        integrity, and — for non-opaque compute nodes — that the recorded
+        shape/dtype still matches what the op actually produces (re-derived
+        via ``jax.eval_shape``), so a rewrite cannot silently corrupt
+        metadata.
+        """
+        problems: list[str] = []
+        seen: set[int] = set()
+        if set(self.order) != set(self.nodes):
+            problems.append("order and nodes disagree on membership")
+        for uid in self.order:
+            node = self.nodes.get(uid)
+            if node is None:
+                continue
+            for d in node.inputs:
+                if d not in self.nodes:
+                    problems.append(f"%{uid} ({node.op}): dangling dep %{d}")
+                elif d not in seen:
+                    problems.append(f"%{uid} ({node.op}): dep %{d} not "
+                                    "scheduled before use")
+            if node.op in ("input", "const"):
+                if node.op == "const" and node.value is None:
+                    problems.append(f"%{uid}: const without a value")
+            elif node.fn is None:
+                problems.append(f"%{uid} ({node.op}): compute node without fn")
+            elif node.attrs is not None:
+                try:
+                    structs = [jax.ShapeDtypeStruct(self.nodes[d].shape,
+                                                    self.nodes[d].dtype)
+                               for d in node.inputs]
+                    out = jax.eval_shape(node.fn, *structs)
+                    if (tuple(out.shape) != node.shape
+                            or jnp.dtype(out.dtype) != jnp.dtype(node.dtype)):
+                        problems.append(
+                            f"%{uid} ({node.op}): recorded "
+                            f"{node.type_str()} but op produces "
+                            f"{jnp.dtype(out.dtype).name}"
+                            f"[{','.join(map(str, out.shape))}]")
+                except Exception as e:  # noqa: BLE001 - report, don't crash
+                    problems.append(f"%{uid} ({node.op}): shape inference "
+                                    f"failed: {e}")
+            seen.add(uid)
+        for o in self.outputs:
+            if self.resolve(o) not in self.nodes:
+                problems.append(f"orphan output %{o}")
+        for src, dst in self.alias.items():
+            if src in self.nodes:
+                problems.append(f"alias source %{src} still present")
+            if self.resolve(dst) not in self.nodes:
+                problems.append(f"alias target of %{src} dangles")
+        return problems
+
+    # -- presentation -------------------------------------------------------
+    def dump(self) -> str:
+        """Text format, one SSA binding per line::
+
+            graph(%0: f32[8,8]) {
+              %1 = add(%0, %0) : f32[8,8]        # cluster 0
+              ...
+              return %1
+            }
+        """
+        ins = ", ".join(f"%{i}: {self.nodes[i].type_str()}"
+                        for i in self.inputs if i in self.nodes)
+        lines = [f"graph({ins}) {{"]
+        for uid in self.order:
+            n = self.nodes[uid]
+            if n.op == "input":
+                continue
+            args = ", ".join(f"%{d}" for d in n.inputs)
+            if n.op == "const":
+                head = f"  %{uid} = const[{n.src_op}]() : {n.type_str()}"
+            else:
+                head = f"  %{uid} = {n.op}({args}) : {n.type_str()}"
+            if n.cluster is not None:
+                head = f"{head:<52}# cluster {n.cluster}"
+            lines.append(head)
+        rets = ", ".join(f"%{self.resolve(o)}" for o in self.outputs)
+        lines.append(f"  return {rets}")
+        lines.append("}")
+        return "\n".join(lines)
+
+    # -- reference interpreter ----------------------------------------------
+    def eval(self, env: dict[int, Any] | None = None) -> list[Any]:
+        """Node-at-a-time evaluation — the semantics every lowering must
+        reproduce (also the legacy/empty-pipeline execution path)."""
+        env = dict(env or {})
+        for uid in self.order:
+            n = self.nodes[uid]
+            if n.op == "input":
+                if uid not in env:
+                    if n.value is None:
+                        raise KeyError(f"input %{uid} missing from env")
+                    env[uid] = n.value
+            elif n.op == "const":
+                env[uid] = n.value
+            else:
+                env[uid] = n.fn(*[env[d] for d in n.inputs])
+        return [env[self.resolve(o)] for o in self.outputs]
+
+
+def trace(roots: Iterable[Any]) -> tuple[Graph, dict[int, Any]]:
+    """Capture the pending subgraph under ``roots`` as a :class:`Graph`.
+
+    ``roots`` are ``LazyTensor``s (duck-typed: ``op/fn/deps/shape/dtype/
+    value/attrs``).  Tensors that already hold a value become ``input``
+    nodes (their value is supplied via the execution env, never baked into
+    the program — so a cached program can be replayed against new leaf
+    values).  Returns the graph plus ``sources``: canonical uid → the
+    traced LazyTensor, for writing results back after execution.
+    """
+    graph = Graph()
+    sources: dict[int, Any] = {}
+    canon: dict[int, int] = {}       # LazyTensor.uid -> canonical uid
+    roots = list(roots)
+
+    def lift_raw(d) -> int:
+        # defensive: a raw python/array dep becomes an (opaque) const
+        arr = jnp.asarray(d)
+        cid = len(graph.order)
+        graph.add(Node(cid, "const", None, (), tuple(arr.shape), arr.dtype,
+                       attrs=None, value=arr))
+        return cid
+
+    def emit(lt) -> int:
+        cid = len(graph.order)
+        canon[lt.uid] = cid
+        if lt.value is not None:
+            graph.add(Node(cid, "input", None, (), tuple(lt.shape), lt.dtype,
+                           attrs=(tuple(lt.shape), str(jnp.dtype(lt.dtype))),
+                           value=lt.value))
+        else:
+            dep_ids = tuple(canon[d.uid] if hasattr(d, "deps") else lift_raw(d)
+                            for d in lt.deps)
+            graph.add(Node(cid, lt.op, lt.fn, dep_ids, tuple(lt.shape),
+                           lt.dtype, attrs=getattr(lt, "attrs", None)))
+        sources[cid] = lt
+        return cid
+
+    def visit(root) -> int:
+        # iterative post-order: deep chains must not hit the recursion limit
+        stack: list[tuple[Any, bool]] = [(root, False)]
+        while stack:
+            lt, expanded = stack.pop()
+            if lt.uid in canon:
+                continue
+            if expanded or lt.value is not None:
+                emit(lt)
+                continue
+            stack.append((lt, True))
+            for d in lt.deps:
+                if hasattr(d, "deps") and d.uid not in canon:
+                    stack.append((d, False))
+        return canon[root.uid]
+
+    out_ids = []
+    for r in roots:
+        if hasattr(r, "deps"):
+            out_ids.append(visit(r))
+        else:
+            arr = jnp.asarray(r)
+            cid = len(graph.order)
+            graph.add(Node(cid, "const", None, (), tuple(arr.shape),
+                           arr.dtype, attrs=None, value=arr))
+            out_ids.append(cid)
+    graph.outputs = tuple(out_ids)
+    graph.inputs = tuple(uid for uid in graph.order
+                         if graph.nodes[uid].op == "input")
+    return graph, sources

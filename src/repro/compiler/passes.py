@@ -1,0 +1,288 @@
+"""Graph rewrite passes + the :class:`PassManager` that sequences them.
+
+Every pass reports node/edge deltas (:class:`PassStats`) so a pipeline run
+is a provenance artifact: ``Session.describe()`` embeds the last report,
+and ``benchmarks/bench_fusion.py`` charts per-pass reductions.
+
+Built-in passes (registered in :data:`PASS_REGISTRY`):
+
+``cse``   common-subexpression elimination — merges pure nodes with equal
+          ``(op, attrs, inputs)``; merged uids land in ``graph.alias`` so
+          live ``LazyTensor`` handles still resolve to the surviving value.
+``fold``  constant folding — precomputes pure nodes whose inputs are all
+          compile-time constants (creation ops like ``full``/``iota``
+          qualify vacuously), bounded by ``fold_size_limit`` elements.
+``dce``   dead-code elimination — drops nodes unreachable from the
+          outputs (CSE leftovers, dead branches of traced functions).
+          ``input`` nodes are kept: they are the program's calling
+          convention.
+``fuse``  elementwise-cluster fusion — partitions the graph into fusable
+          regions (``graph.clusters``) lowered to one generated kernel
+          each; cycle-safety is checked with ancestor/descendant bitsets.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+from .graph import Cluster, ELEMENTWISE_OPS, Graph, IMPURE_OPS
+
+
+@dataclass
+class PassStats:
+    """Node/edge deltas one pass produced, plus pass-specific extras."""
+
+    name: str
+    nodes_before: int
+    nodes_after: int
+    edges_before: int
+    edges_after: int
+    extra: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def nodes_removed(self) -> int:
+        return self.nodes_before - self.nodes_after
+
+    def describe(self) -> dict:
+        return {"pass": self.name,
+                "nodes": [self.nodes_before, self.nodes_after],
+                "edges": [self.edges_before, self.edges_after],
+                **self.extra}
+
+
+class Pass:
+    name = "pass"
+
+    def run(self, graph: Graph) -> dict[str, Any]:
+        """Rewrite ``graph`` in place; return pass-specific stats."""
+        raise NotImplementedError
+
+
+class CSEPass(Pass):
+    """Merge structurally-identical pure nodes.
+
+    Safe only for nodes whose behavior is fully captured by
+    ``(op, attrs)``: opaque nodes (``attrs is None``), impure ops, and
+    ``input`` nodes are never merged.  ``const`` nodes merge by their
+    originating op+attrs (kept through folding), never by array content.
+    """
+
+    name = "cse"
+
+    def run(self, graph: Graph) -> dict[str, Any]:
+        graph.clear_clusters()
+        seen: dict[tuple, int] = {}
+        merged = 0
+        for uid in list(graph.order):
+            node = graph.nodes[uid]
+            node.inputs = tuple(graph.resolve(d) for d in node.inputs)
+            if (node.op == "input" or node.attrs is None
+                    or node.src_op in IMPURE_OPS):
+                continue
+            key = (node.op, node.src_op, node.attrs, node.inputs)
+            rep = seen.setdefault(key, uid)
+            if rep != uid:
+                graph.remove(uid, replacement=rep)
+                merged += 1
+        graph.outputs = tuple(graph.resolve(o) for o in graph.outputs)
+        return {"merged": merged}
+
+
+class ConstantFoldPass(Pass):
+    """Precompute pure nodes over compile-time constants.
+
+    A node folds when it is non-opaque, pure, every input is a ``const``,
+    and its output is at most ``size_limit`` elements.  Folded nodes keep
+    their original op in ``src_op`` (telemetry tags stay meaningful) and
+    an attrs key derived from it (so CSE can still merge equal constants).
+    """
+
+    name = "fold"
+
+    def __init__(self, size_limit: int = 1 << 16):
+        self.size_limit = size_limit
+
+    def run(self, graph: Graph) -> dict[str, Any]:
+        graph.clear_clusters()
+        folded = 0
+        for uid in graph.order:
+            node = graph.nodes[uid]
+            if (node.op in ("input", "const") or node.attrs is None
+                    or node.src_op in IMPURE_OPS
+                    or node.size > self.size_limit):
+                continue
+            ins = [graph.nodes[d] for d in node.inputs]
+            if not all(n.op == "const" and n.attrs is not None for n in ins):
+                continue
+            node.value = node.fn(*[n.value for n in ins])
+            node.attrs = (node.op, node.attrs,
+                          tuple(n.attrs for n in ins))
+            node.op, node.fn, node.inputs = "const", None, ()
+            folded += 1
+        return {"folded": folded}
+
+
+class DCEPass(Pass):
+    """Drop nodes unreachable from the outputs (inputs are kept — they
+    are the program interface, and dropping them would renumber the
+    caller's argument mapping)."""
+
+    name = "dce"
+
+    def run(self, graph: Graph) -> dict[str, Any]:
+        graph.clear_clusters()
+        live: set[int] = set(graph.inputs)
+        stack = [graph.resolve(o) for o in graph.outputs]
+        while stack:
+            uid = stack.pop()
+            if uid in live:
+                continue
+            live.add(uid)
+            stack.extend(d for d in graph.nodes[uid].inputs if d not in live)
+        removed = 0
+        for uid in list(graph.order):
+            if uid not in live:
+                graph.remove(uid)
+                removed += 1
+        return {"removed": removed}
+
+
+class FusionPass(Pass):
+    """Partition the graph into elementwise clusters.
+
+    Greedy over topo order: each elementwise node tries to join the
+    union of its producers' clusters.  A merge is legal iff no path
+    leaves the merged region and re-enters it (the region must execute
+    atomically); checked with precomputed ancestor/descendant bitsets —
+    ``bad = desc(region) & anc(region) & ~region``.  Clusters smaller
+    than ``min_cluster_size`` are dissolved back to single dispatches.
+    """
+
+    name = "fuse"
+
+    def __init__(self, min_cluster_size: int = 2):
+        self.min_cluster_size = min_cluster_size
+
+    def run(self, graph: Graph) -> dict[str, Any]:
+        graph.clear_clusters()
+        order = graph.order
+        idx = {uid: i for i, uid in enumerate(order)}
+        consumers = graph.consumers()
+
+        desc = {uid: 0 for uid in order}
+        for uid in reversed(order):
+            m = 0
+            for c in consumers[uid]:
+                m |= (1 << idx[c]) | desc[c]
+            desc[uid] = m
+        anc = {uid: 0 for uid in order}
+        for uid in order:
+            m = 0
+            for d in graph.nodes[uid].inputs:
+                m |= (1 << idx[d]) | anc[d]
+            anc[uid] = m
+
+        clusters: list[set[int]] = []
+        cluster_of: dict[int, int] = {}
+
+        def legal(members: set[int]) -> bool:
+            mask = 0
+            dm = 0
+            am = 0
+            for m in members:
+                mask |= 1 << idx[m]
+                dm |= desc[m]
+                am |= anc[m]
+            return (dm & am & ~mask) == 0
+
+        for uid in order:
+            node = graph.nodes[uid]
+            if node.op not in ELEMENTWISE_OPS:
+                continue
+            cands = sorted({cluster_of[d] for d in node.inputs
+                            if d in cluster_of})
+            placed = False
+            # try the full union first, then each producer cluster alone
+            for group in ([cands] if len(cands) > 1 else []) + \
+                         [[c] for c in cands]:
+                members = {uid}
+                for ci in group:
+                    members |= clusters[ci]
+                if legal(members):
+                    tgt = group[0]
+                    clusters[tgt] = members
+                    for ci in group[1:]:
+                        clusters[ci] = set()
+                    for m in members:
+                        cluster_of[m] = tgt
+                    placed = True
+                    break
+            if not placed:
+                cluster_of[uid] = len(clusters)
+                clusters.append({uid})
+
+        graph.clusters = []
+        out_set = set(graph.resolve(o) for o in graph.outputs)
+        for members in clusters:
+            if len(members) < self.min_cluster_size:
+                continue
+            cid = len(graph.clusters)
+            node_ids = tuple(uid for uid in order if uid in members)
+            ext_inputs: list[int] = []
+            outputs: list[int] = []
+            for uid in node_ids:
+                graph.nodes[uid].cluster = cid
+                for d in graph.nodes[uid].inputs:
+                    if d not in members and d not in ext_inputs:
+                        ext_inputs.append(d)
+            for uid in node_ids:
+                if (uid in out_set
+                        or any(c not in members for c in consumers[uid])):
+                    outputs.append(uid)
+            graph.clusters.append(Cluster(cid, node_ids, tuple(ext_inputs),
+                                          tuple(outputs)))
+        clustered = sum(len(c.node_ids) for c in graph.clusters)
+        return {"clusters": len(graph.clusters),
+                "clustered_nodes": clustered,
+                "largest_cluster": max(
+                    (len(c.node_ids) for c in graph.clusters), default=0)}
+
+
+PASS_REGISTRY: dict[str, type[Pass]] = {
+    "cse": CSEPass,
+    "fold": ConstantFoldPass,
+    "dce": DCEPass,
+    "fuse": FusionPass,
+}
+
+
+class PassManager:
+    """Runs a pipeline of passes, collecting :class:`PassStats` per pass."""
+
+    def __init__(self, passes: list[Pass]):
+        self.passes = list(passes)
+
+    @classmethod
+    def from_policy(cls, policy) -> "PassManager":
+        passes: list[Pass] = []
+        for name in policy.pipeline:
+            if name not in PASS_REGISTRY:
+                raise KeyError(f"unknown compiler pass {name!r}; "
+                               f"known: {sorted(PASS_REGISTRY)}")
+            if name == "fold":
+                passes.append(ConstantFoldPass(policy.fold_size_limit))
+            elif name == "fuse":
+                passes.append(FusionPass(policy.min_cluster_size))
+            else:
+                passes.append(PASS_REGISTRY[name]())
+        return cls(passes)
+
+    def run(self, graph: Graph) -> list[PassStats]:
+        report: list[PassStats] = []
+        for p in self.passes:
+            nb, eb = len(graph.order), graph.n_edges()
+            extra = p.run(graph)
+            report.append(PassStats(p.name, nb, len(graph.order),
+                                    eb, graph.n_edges(), extra))
+        return report

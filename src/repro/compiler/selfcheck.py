@@ -1,0 +1,212 @@
+"""Compiler self-check: round-trip every pass over a canned graph corpus.
+
+Run as ``python -m repro.compiler.selfcheck`` (CI does).  For each corpus
+graph and each pass pipeline, this:
+
+ 1. snapshots reference outputs from the un-optimized graph;
+ 2. runs the pipeline one pass at a time, calling ``Graph.validate()``
+    after every pass — failing on IR invariant violations (dangling deps,
+    orphan outputs, broken alias chains, shape/dtype mismatches after a
+    rewrite);
+ 3. lowers under every lowering mode and checks the executed outputs
+    against the reference;
+ 4. checks the memory plan is sane: no duplicate alloc/free uids, every
+    free paired with an alloc.
+
+Exit status 0 = all clean; 1 = violations (printed).
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import CompilerPolicy, session
+
+from . import graph as graph_mod
+from .lowering import lower, memory_plan, snapshot_logical
+from .passes import PASS_REGISTRY, PassManager
+
+
+def _lazy_backend():
+    from repro.core.tensor.lazy_backend import LazyBackend
+
+    return LazyBackend()
+
+
+# -- corpus ------------------------------------------------------------------
+# each entry: name -> fn(ops, x) returning (roots, keep_outputs) where
+# keep_outputs selects a subset of traced outputs (dropping some creates
+# genuinely dead branches for DCE to collect)
+
+
+def _chain(ops, x):
+    y = x
+    for _ in range(6):
+        y = ops.tanh(ops.mul(ops.add(y, y), ops.full_like(y, 0.5)))
+    return [y], None
+
+
+def _shared_subexpr(ops, x):
+    # the same subexpression built twice -> CSE must merge, frees must
+    # still be emitted exactly once per surviving node
+    a1 = ops.exp(ops.mul(x, x))
+    a2 = ops.exp(ops.mul(x, x))
+    return [ops.add(ops.tanh(a1), ops.sqrt(ops.abs(a2)))], None
+
+
+def _dead_branch(ops, x):
+    live = ops.tanh(ops.add(x, x))
+    dead = ops.exp(ops.mul(x, ops.full_like(x, 3.0)))
+    return [live, ops.add(dead, dead)], (0,)
+
+
+def _diamond(ops, x):
+    a = ops.add(x, ops.full_like(x, 1.0))
+    left = ops.exp(a)
+    right = ops.sum(a, axis=-1, keepdims=True)   # reduction splits clusters
+    return [ops.mul(left, ops.broadcast_to(right, left.shape))], None
+
+
+def _reduce_matmul(ops, x):
+    w = ops.full((x.shape[-1], 4), 0.1)
+    h = ops.relu(ops.matmul(x, w))
+    return [ops.sum(ops.mul(h, h), axis=None, keepdims=False)], None
+
+
+def _mixed_dtype(ops, x):
+    lo = ops.astype(x, jnp.bfloat16)
+    y = ops.astype(ops.mul(lo, lo), jnp.float32)
+    mask = ops.ge(x, ops.full_like(x, 0.0))
+    return [ops.where(mask, y, ops.neg(y))], None
+
+
+def _const_heavy(ops, x):
+    a = ops.mul(ops.full((4, 8), 2.0), ops.full((4, 8), 3.0))
+    b = ops.add(a, ops.iota(jnp.float32, (4, 8), 1))
+    return [ops.add(x, b)], None
+
+
+def _random_opaque(ops, x):
+    key = jax.random.PRNGKey(0)
+    noise = ops.random_uniform(key, x.shape, jnp.float32, 0.0, 1.0)
+    return [ops.add(x, ops.mul(noise, noise))], None
+
+
+CORPUS: dict[str, Callable] = {
+    "chain": _chain,
+    "shared_subexpr": _shared_subexpr,
+    "dead_branch": _dead_branch,
+    "diamond": _diamond,
+    "reduce_matmul": _reduce_matmul,
+    "mixed_dtype": _mixed_dtype,
+    "const_heavy": _const_heavy,
+    "random_opaque": _random_opaque,
+}
+
+PIPELINES: tuple[tuple[str, ...], ...] = (
+    ("cse",), ("fold",), ("dce",), ("fuse",),
+    ("cse", "fold", "dce", "fuse"),      # the default
+    ("fold", "cse", "dce", "fuse"),      # permuted
+    ("fuse", "cse", "dce"),              # fusion first
+    (),                                  # legacy / identity
+)
+
+LOWERINGS = ("eager", "jit", "auto")
+
+
+def _build(name: str):
+    from repro.core.tensor import ops
+
+    lb = _lazy_backend()
+    with session(backend=lb):
+        x = lb._lift(jnp.linspace(-2.0, 2.0, 32).reshape(4, 8)
+                     .astype(jnp.float32))
+        roots, keep = CORPUS[name](ops, x)
+    graph, sources = graph_mod.trace(roots)
+    if keep is not None:
+        graph.outputs = tuple(graph.outputs[i] for i in keep)
+    return graph, sources
+
+
+def run_corpus(verbose: bool = False,
+               pipelines: tuple[tuple[str, ...], ...] | None = None
+               ) -> list[str]:
+    """All (graph, pipeline, lowering) round-trips; returns violations."""
+    problems: list[str] = []
+    for gname in CORPUS:
+        for pipeline in (pipelines if pipelines is not None else PIPELINES):
+            graph, _ = _build(gname)
+            where = f"{gname} / {'+'.join(pipeline) or 'identity'}"
+            pre = graph.validate()
+            problems += [f"{where}: pre-pass: {p}" for p in pre]
+            ref = [np.asarray(v) for v in graph.eval()]
+            # fused low-precision regions may legally skip intermediate
+            # rounding (XLA keeps f32 through a fused convert-op-convert)
+            low_precision = any(
+                jnp.dtype(graph.nodes[u].dtype).itemsize < 4
+                and jnp.issubdtype(graph.nodes[u].dtype, jnp.floating)
+                for u in graph.order)
+            rtol, atol = (2e-2, 1e-2) if low_precision else (1e-5, 1e-6)
+            snapshot = snapshot_logical(graph)
+            policy = CompilerPolicy(pipeline=pipeline)
+            pm = PassManager.from_policy(policy)
+            for p in pm.passes:
+                p.run(graph)
+                problems += [f"{where}: after {p.name}: {v}"
+                             for v in graph.validate()]
+            plan = memory_plan(snapshot, graph)
+            allocs = [a[0] for a in plan[0]]
+            if len(allocs) != len(set(allocs)):
+                problems.append(f"{where}: duplicate alloc uids")
+            if len(plan[1]) != len(set(plan[1])):
+                problems.append(f"{where}: duplicate free uids")
+            if not set(plan[1]) <= set(allocs):
+                problems.append(f"{where}: free without alloc")
+            for mode in LOWERINGS:
+                exe = lower(graph, policy.replace(lowering=mode), plan=plan)
+                env = {cid: graph.nodes[cid].value for cid in exe.inputs}
+                try:
+                    out = exe.output_values(exe.run(env))
+                except Exception as e:  # noqa: BLE001
+                    problems.append(f"{where} [{mode}]: execution failed: {e}")
+                    continue
+                for i, (got, want) in enumerate(zip(out, ref)):
+                    got = np.asarray(got)
+                    if got.shape != want.shape or str(got.dtype) != str(
+                            want.dtype):
+                        problems.append(
+                            f"{where} [{mode}]: output {i} type drift "
+                            f"{got.dtype}{got.shape} vs "
+                            f"{want.dtype}{want.shape}")
+                    elif not np.allclose(got.astype(np.float64),
+                                         want.astype(np.float64),
+                                         rtol=rtol, atol=atol):
+                        problems.append(
+                            f"{where} [{mode}]: output {i} numerics diverge")
+            if verbose:
+                status = "ok" if not problems else "..."
+                print(f"  {where:<44} {status}")
+    return problems
+
+
+def main() -> int:
+    print(f"repro.compiler selfcheck: {len(CORPUS)} graphs x "
+          f"{len(PIPELINES)} pipelines x {len(LOWERINGS)} lowerings "
+          f"(passes: {sorted(PASS_REGISTRY)})")
+    problems = run_corpus(verbose=True)
+    if problems:
+        print(f"\n{len(problems)} violation(s):")
+        for p in problems:
+            print(f"  FAIL {p}")
+        return 1
+    print("all invariants hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

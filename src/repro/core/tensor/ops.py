@@ -210,7 +210,18 @@ def conv2d(x, w, stride=(1, 1), padding="SAME"):
 
 
 def materialize(x):
-    return current_backend().materialize(x)
+    """Force deferred value(s).  A list/tuple materializes *jointly*: on
+    backends that support it (lazy), the whole multi-output subgraph is
+    compiled as one program, so shared subexpressions run once."""
+    backend = current_backend()
+    if isinstance(x, (list, tuple)):
+        many = getattr(backend, "materialize_many", None)
+        vals = many(x) if many is not None \
+            else [backend.materialize(v) for v in x]
+        if hasattr(x, "_fields"):         # namedtuple: positional fields
+            return type(x)(*vals)
+        return type(x)(vals)
+    return backend.materialize(x)
 
 
 # --------------------------------------------------------------------------

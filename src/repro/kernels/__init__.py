@@ -1,3 +1,3 @@
-from . import ops, ref
+from . import cluster, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["cluster", "ops", "ref"]

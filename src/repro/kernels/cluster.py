@@ -1,0 +1,108 @@
+"""Generated elementwise cluster kernels.
+
+The compiler's fusion pass partitions a traced graph into elementwise
+regions; this module *synthesizes* one Pallas kernel per region — the body
+is generated from the cluster's op list, reading every external input once
+from VMEM, running the region's ops on register values, and writing each
+external output once.  That is the ArrayFire-JIT payoff (paper §4.1.1,
+Fig. 2) made concrete: N dispatches collapse into a single kernel whose
+arithmetic intensity grows with the cluster.
+
+Off-TPU the kernel runs under ``interpret=True`` (reference semantics, same
+numerics); shapes/dtypes the TPU lowering cannot tile fall back to a
+per-cluster ``jax.jit`` of the same synthesized body — fusion is an
+optimization, never a correctness constraint.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: dtypes the TPU tiling supports for generated elementwise bodies.
+_TPU_DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+def make_body(nodes: Sequence[Any], input_ids: Sequence[int],
+              output_ids: Sequence[int]) -> Callable:
+    """Synthesize the cluster's straight-line body: values in, values out.
+
+    Shared by every lowering: the Pallas kernel wraps it with ref
+    reads/writes; the jit fallback compiles it directly.
+    """
+    nodes = tuple(nodes)
+    input_ids = tuple(input_ids)
+    output_ids = tuple(output_ids)
+
+    def body(*vals):
+        env = dict(zip(input_ids, vals))
+        for n in nodes:
+            env[n.uid] = n.fn(*[env[d] for d in n.inputs])
+        return tuple(env[o] for o in output_ids)
+
+    body.__name__ = f"cluster_{'_'.join(n.op for n in nodes[:4])}"
+    return body
+
+
+def pallas_supported(nodes: Sequence[Any], input_nodes: Sequence[Any],
+                     on_tpu: bool) -> bool:
+    """Can this cluster become a single ``pallas_call``?
+
+    Requires one common shape across members and external inputs (the
+    generated body does no in-kernel broadcasting) and — on TPU only —
+    MXU/VPU-tileable shapes and dtypes; interpret mode accepts anything.
+    """
+    shapes = {tuple(n.shape) for n in nodes}
+    shapes |= {tuple(n.shape) for n in input_nodes}
+    if len(shapes) != 1:
+        return False
+    (shape,) = shapes
+    if len(shape) == 0:
+        return False
+    if not on_tpu:
+        return True
+    if len(shape) < 2 or shape[-1] % 128 != 0 or shape[-2] % 8 != 0:
+        return False
+    dtypes = {jnp.dtype(n.dtype) for n in list(nodes) + list(input_nodes)}
+    return all(d in _TPU_DTYPES for d in dtypes)
+
+
+def build_cluster_kernel(nodes: Sequence[Any], input_nodes: Sequence[Any],
+                         output_nodes: Sequence[Any],
+                         interpret: bool = True) -> Callable:
+    """One ``pallas_call`` for the whole cluster.
+
+    Returns ``fn(*input_arrays) -> tuple(output_arrays)``; the kernel body
+    is generated from the cluster's op list (see :func:`make_body`).
+    """
+    body = make_body(nodes, [n.uid for n in input_nodes],
+                     [n.uid for n in output_nodes])
+    n_in = len(input_nodes)
+
+    def kernel(*refs):
+        ins = [r[...] for r in refs[:n_in]]
+        outs = body(*ins)
+        for r, v in zip(refs[n_in:], outs):
+            r[...] = v
+
+    out_shape = [jax.ShapeDtypeStruct(tuple(n.shape), n.dtype)
+                 for n in output_nodes]
+    call = pl.pallas_call(kernel, out_shape=out_shape, interpret=interpret)
+
+    def run(*vals):
+        out = call(*vals)
+        return tuple(out)
+
+    run.__name__ = f"pallas_{body.__name__}"
+    return run
+
+
+def build_jit_cluster(nodes: Sequence[Any], input_nodes: Sequence[Any],
+                      output_nodes: Sequence[Any]) -> Callable:
+    """Per-cluster ``jax.jit`` fallback over the same synthesized body."""
+    body = make_body(nodes, [n.uid for n in input_nodes],
+                     [n.uid for n in output_nodes])
+    return jax.jit(body)

@@ -123,6 +123,61 @@ class ServingPolicy:
                 "prefill_chunk": self.prefill_chunk}
 
 
+@dataclass(frozen=True)
+class CompilerPolicy:
+    """Graph-compiler pipeline selection carried by a :class:`Session`.
+
+    The lazy tensor backend routes every ``materialize`` through
+    ``repro.compiler``: trace → passes → lowering.  This policy picks the
+    pass pipeline and the lowering strategy; ``describe()`` lands in
+    ``Session.describe()`` so every benchmark row records how its graphs
+    were compiled.
+
+    pipeline:
+        ordered pass names run by the ``PassManager`` (see
+        ``repro.compiler.passes.PASS_REGISTRY``); ``()`` is the legacy
+        lazy path — no rewrites, node-at-a-time evaluation.
+    lowering:
+        ``"auto"`` — fused elementwise clusters become *generated* Pallas
+        kernels (``interpret=True`` off-TPU) with a per-cluster ``jax.jit``
+        fallback for unsupported ops/dtypes; ``"jit"`` — always the jit
+        fallback; ``"eager"`` — clusters run un-compiled (debugging).
+    fold_size_limit:
+        constant folding only precomputes nodes up to this many elements
+        (guards compile-time blowup on huge constants).
+    min_cluster_size:
+        fusion keeps clusters with at least this many nodes; smaller
+        groups stay as individual dispatches.
+    cache_programs:
+        reuse compiled programs across materializations with an identical
+        graph signature (opaque nodes — e.g. random ops — always
+        recompile).
+    """
+
+    pipeline: tuple[str, ...] = ("cse", "fold", "dce", "fuse")
+    lowering: str = "auto"
+    fold_size_limit: int = 1 << 16
+    min_cluster_size: int = 2
+    cache_programs: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "pipeline", tuple(self.pipeline))
+
+    @classmethod
+    def legacy(cls) -> "CompilerPolicy":
+        """The pre-compiler lazy path: no rewrites, eager node-by-node."""
+        return cls(pipeline=(), lowering="eager", cache_programs=False)
+
+    def replace(self, **kw) -> "CompilerPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> dict:
+        return {"pipeline": list(self.pipeline), "lowering": self.lowering,
+                "fold_size_limit": self.fold_size_limit,
+                "min_cluster_size": self.min_cluster_size,
+                "cache_programs": self.cache_programs}
+
+
 _DTYPE_ALIASES = {
     "f32": "float32", "fp32": "float32", "float32": "float32",
     "f16": "float16", "fp16": "float16", "float16": "float16",

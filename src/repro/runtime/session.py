@@ -17,7 +17,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Any
 
-from .policies import KernelOverrides, PrecisionPolicy, ServingPolicy
+from .policies import (CompilerPolicy, KernelOverrides, PrecisionPolicy,
+                       ServingPolicy)
 
 # Default mesh-axis candidates for the activation batch dimension; matches
 # the historical sharding/context.py default.
@@ -41,9 +42,9 @@ class Session:
         the rules object (``sharding.rules.make_rules(...)``) the mesh
         was planned with; carried for provenance and so layers can reach
         rule-derived facts without replumbing.
-    kernels / precision / serving:
+    kernels / precision / serving / compiler:
         see :class:`KernelOverrides` / :class:`PrecisionPolicy` /
-        :class:`ServingPolicy`.
+        :class:`ServingPolicy` / :class:`CompilerPolicy`.
     memory:
         a ``MemoryManagerAdapter`` (host-side pool / trace-replay policy
         under study) or None.
@@ -58,6 +59,7 @@ class Session:
     kernels: KernelOverrides = field(default_factory=KernelOverrides)
     precision: PrecisionPolicy = field(default_factory=PrecisionPolicy)
     serving: ServingPolicy = field(default_factory=ServingPolicy)
+    compiler: CompilerPolicy = field(default_factory=CompilerPolicy)
     memory: Any = None
     tag: str = ""
 
@@ -66,7 +68,8 @@ class Session:
             object.__setattr__(self, "batch_axes", tuple(self.batch_axes))
         for name, cls in (("kernels", KernelOverrides),
                           ("precision", PrecisionPolicy),
-                          ("serving", ServingPolicy)):
+                          ("serving", ServingPolicy),
+                          ("compiler", CompilerPolicy)):
             val = getattr(self, name)
             if isinstance(val, dict):
                 object.__setattr__(self, name, cls(**val))
@@ -75,7 +78,7 @@ class Session:
     def replace(self, **overrides) -> "Session":
         """A derived session; nested fields accept dicts of overrides:
         ``s.replace(kernels={"matmul": fn})`` keeps the other kernels."""
-        for name in ("kernels", "precision", "serving"):
+        for name in ("kernels", "precision", "serving", "compiler"):
             val = overrides.get(name)
             if isinstance(val, dict):
                 overrides[name] = getattr(self, name).replace(**val)
@@ -119,6 +122,21 @@ class Session:
         if self.memory is not None:
             memory = {"manager": type(self.memory).__name__,
                       "capacity": int(getattr(self.memory, "capacity", 0))}
+        compiler = self.compiler.describe()
+        # per-pass stats from the most recent pipeline run through the
+        # *resolved* backend (compiler-aware backends expose
+        # `last_compile_report`); never force a resolution just to
+        # describe.  Registry backends are process-wide singletons, so
+        # only embed stats actually produced under THIS session's policy —
+        # another session's run must not masquerade as our provenance.
+        inst = self.__dict__.get("_backend_inst")
+        if inst is None and not isinstance(self.backend, str):
+            inst = self.backend
+        report = getattr(inst, "last_compile_report", None)
+        if (report is not None
+                and getattr(inst, "last_compile_policy", None)
+                == self.compiler):
+            compiler["last_run"] = report
         return {
             "backend": backend,
             "mesh": mesh,
@@ -127,6 +145,7 @@ class Session:
             "kernels": self.kernels.describe(),
             "precision": self.precision.describe(),
             "serving": self.serving.describe(),
+            "compiler": compiler,
             "memory": memory,
             "tag": self.tag,
         }
