@@ -12,22 +12,36 @@ re-tracing + re-lowering + XLA-compiling after a change.  We measure:
 The paper's claim (orders-of-magnitude cheaper iteration than monolithic
 frameworks) maps to: incremental ≈ cold ≪ a monolithic rebuild, and
 cached ≈ microseconds.
+
+Second section: **static-analysis overhead**.  ``repro.compile`` runs the
+``repro.analysis`` suite at the session's check level; this measures the
+graph-pipeline compile (trace → passes → verify → lower) at every level
+over a representative elementwise program.  The contract asserted in CI
+(``--quick``): ``default`` adds < 5% over ``off`` — always-on
+verification must be effectively free.
+
+``--quick`` shrinks repetitions and skips the jit section (the XLA
+compile dominates CI minutes and says nothing about analysis cost);
+``--out PATH`` writes a JSON artifact.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import statistics
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import get_config
-from repro.core.optim import AdamW
-from repro.models import build_model
-from repro.training.train_loop import TrainConfig, make_step_fn
 
+def bench_jit_adaptation() -> list[tuple[str, float, str]]:
+    from repro.configs.base import get_config
+    from repro.core.optim import AdamW
+    from repro.models import build_model
+    from repro.training.train_loop import TrainConfig, make_step_fn
 
-def run() -> list[tuple[str, float, str]]:
     cfg = get_config("gemma3-27b", reduced=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -68,6 +82,87 @@ def run() -> list[tuple[str, float, str]]:
     ]
 
 
+def _analysis_workload(ops, x):
+    """A representative fusable elementwise program (~10 graph nodes)."""
+    y = ops.mul(ops.add(x, x), ops.tanh(x))
+    y = ops.add(ops.sqrt(ops.abs(y)), ops.neg(x))
+    y = ops.mul(ops.exp(ops.neg(ops.abs(y))), y)
+    return ops.sum(y, axis=None, keepdims=False)
+
+
+def bench_analysis_overhead(reps: int) -> dict:
+    """Median graph-pipeline compile time per check level.
+
+    Each repetition builds a fresh CompiledFunction so every call is a
+    full trace → passes (→ verify) → analyze → lower; the run itself is
+    excluded from nothing (it is identical across levels and small).
+    """
+    import repro
+    from repro.core.tensor import ops
+
+    x = jnp.linspace(-2.0, 2.0, 64 * 64).reshape(64, 64)
+    times: dict[str, float] = {}
+    for level in ("off", "default", "strict"):
+        samples = []
+        for _ in range(reps):
+            f = repro.compile(lambda a: _analysis_workload(ops, a),
+                              check=level)
+            t0 = time.perf_counter()
+            out = f(x)
+            jax.block_until_ready(out)
+            samples.append(time.perf_counter() - t0)
+        times[level] = statistics.median(samples)
+    off = times["off"]
+    return {
+        "reps": reps,
+        "median_s": times,
+        "overhead": {lvl: times[lvl] / off - 1.0 for lvl in times},
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: skip the jit section, fewer reps, and "
+                    "assert the default-level overhead contract (<5%%)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="repetitions per analysis level")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write a JSON artifact to PATH")
+    args = ap.parse_args(argv)
+
+    result: dict = {"bench": "compile"}
+
+    if not args.quick:
+        rows = bench_jit_adaptation()
+        result["jit_adaptation"] = {n: {"seconds": v, "note": d}
+                                    for n, v, d in rows}
+        for name, val, derived in rows:
+            print(f"{name},{val*1e6:.1f},{derived}")
+
+    reps = args.reps or (9 if args.quick else 15)
+    ana = bench_analysis_overhead(reps)
+    result["analysis_overhead"] = ana
+    for lvl, t in ana["median_s"].items():
+        print(f"analysis_compile_{lvl}_s,{t*1e6:.1f},"
+              f"overhead {ana['overhead'][lvl]*100:+.1f}% vs off")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.out}")
+
+    if args.quick:
+        # the CI contract: always-on verification is effectively free
+        overhead = ana["overhead"]["default"]
+        if overhead >= 0.05:
+            print(f"FAIL default-level analysis adds {overhead*100:.1f}% "
+                  "to compile time (budget: 5%)")
+            return 1
+        print(f"ok: default-level analysis adds {overhead*100:.1f}% "
+              "(< 5% budget)")
+    return 0
+
+
 if __name__ == "__main__":
-    for name, val, derived in run():
-        print(f"{name},{val*1e6:.1f},{derived}")
+    raise SystemExit(main())

@@ -7,13 +7,13 @@ Top-level API: the unified runtime Session —
         ...
 """
 
-from repro.runtime import (CompilerPolicy, KernelOverrides, PrecisionPolicy,
-                           ServingPolicy, Session, current_session,
-                           default_session, session)
+from repro.runtime import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
+                           PrecisionPolicy, ServingPolicy, Session,
+                           current_session, default_session, session)
 
 __all__ = [
     "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
-    "CompilerPolicy",
+    "CompilerPolicy", "AnalysisPolicy",
     "session", "current_session", "default_session",
     "compile",
 ]

@@ -1,0 +1,47 @@
+"""repro.analysis — static verification over the Graph IR, Pallas
+lowering, and paged serving runtime.
+
+Nothing here executes the program: every checker is a pure function from
+IR / launch parameters / cache snapshots to structured
+:class:`Diagnostic`s, so it can run between compiler passes, at trace
+time, and in CI without numerics in the loop.
+
+    check_graph        structural IR + shape/dtype abstract interpretation
+    check_clusters     fusion-partition integrity, liveness, VMEM budgets
+    check_executable   lowered schedule: write-once, defs-before-uses
+    check_memory_plan  alloc/free exactly-once invariants
+    check_numerics     bf16 accumulation / fp8 storage-only lint
+    check_kernel_call  declared tile contracts for hand-written kernels
+    check_paged_cache  KV block-table leak / double-free / trash audits
+    analyze_graph      the whole suite over one compiled program
+
+Selection is session-scoped: ``repro.session(analysis={"level":
+"strict"})`` (see :class:`repro.runtime.AnalysisPolicy`), or per-call via
+``repro.compile(fn, check="strict")``.  ``python -m repro.analysis``
+runs the suite over the compiler selfcheck corpus plus a *mutation
+corpus* of deliberately seeded defects that every rule must catch.
+"""
+
+from repro.runtime.policies import AnalysisPolicy
+
+from .diagnostics import (AnalysisError, Diagnostic, DiagnosticReport,
+                          Severity)
+from .liveness import check_clusters, check_executable, check_memory_plan
+from .numerics import check_numerics
+from .serving import CacheSnapshot, check_paged_cache, snapshot_cache
+from .shapes import check_graph, infer_node
+from .suite import analyze_and_raise, analyze_graph
+from .tiles import (KERNEL_CONTRACTS, TileDim, check_cluster_specs,
+                    check_kernel_call, check_tiling)
+
+__all__ = [
+    "AnalysisPolicy", "AnalysisError", "Diagnostic", "DiagnosticReport",
+    "Severity",
+    "check_graph", "infer_node",
+    "check_clusters", "check_executable", "check_memory_plan",
+    "check_numerics",
+    "check_kernel_call", "check_tiling", "check_cluster_specs",
+    "KERNEL_CONTRACTS", "TileDim",
+    "CacheSnapshot", "snapshot_cache", "check_paged_cache",
+    "analyze_graph", "analyze_and_raise",
+]

@@ -1,0 +1,123 @@
+"""``python -m repro.analysis`` — the static-analysis gauntlet.
+
+Two halves, both must pass:
+
+* **clean corpus** — every selfcheck graph through every pass-pipeline
+  permutation with the structured verifier running *between passes*
+  (``PassManager(verify=...)``), then the full suite over the optimized
+  graph and its lowered executable.  Zero findings at WARNING severity
+  or above, at both ``default`` and ``strict`` levels: the analyses
+  must not cry wolf on correct programs.
+* **mutation corpus** — every deliberately seeded defect in
+  ``repro.analysis.mutations`` must be flagged by exactly its intended
+  rule: the analyses must not go blind, and must not cascade.
+
+``--json PATH`` writes the full machine-readable result (per-case
+diagnostics + mutation table) for the CI artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .diagnostics import Severity
+from .mutations import MUTATIONS, run_mutations
+from .suite import analyze_graph
+
+
+def run_clean_corpus(level: str) -> tuple[list[dict], list[str]]:
+    """All (graph, pipeline) cells with between-pass verification; returns
+    (per-cell results, failure strings)."""
+    from repro.compiler.lowering import lower, memory_plan, snapshot_logical
+    from repro.compiler.passes import PassManager
+    from repro.compiler.selfcheck import CORPUS, PIPELINES, _build
+    from repro.runtime.policies import AnalysisPolicy, CompilerPolicy
+
+    apol = AnalysisPolicy(level=level)
+    cells: list[dict] = []
+    failures: list[str] = []
+    for gname in CORPUS:
+        for pipeline in PIPELINES:
+            where = f"{gname} / {'+'.join(pipeline) or 'identity'}"
+            graph, _ = _build(gname)
+            cpol = CompilerPolicy(pipeline=pipeline)
+            snap = snapshot_logical(graph)
+            cell = {"graph": gname, "pipeline": list(pipeline),
+                    "level": level, "diagnostics": []}
+            try:
+                report = PassManager.from_policy(cpol).run(graph,
+                                                           verify=apol)
+                plan = memory_plan(snap, graph)
+                exe = lower(graph, cpol, report, interpret=True, plan=plan)
+                diags = analyze_graph(graph, apol, exe=exe, where=where)
+            except Exception as e:  # noqa: BLE001 - a failure IS the result
+                failures.append(f"{where}: {type(e).__name__}: {e}")
+                cell["error"] = str(e)
+                cells.append(cell)
+                continue
+            cell["diagnostics"] = [d.to_json() for d in diags]
+            cells.append(cell)
+            loud = diags.at_least(Severity.WARNING)
+            for d in loud:
+                failures.append(f"{where}: false positive: {d.format()}")
+    return cells, failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static-analysis selfcheck: clean corpus (zero false "
+                    "positives) + mutation corpus (every seeded defect "
+                    "caught by exactly its rule)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable results to PATH")
+    args = ap.parse_args(argv)
+
+    from repro.compiler.selfcheck import CORPUS, PIPELINES
+
+    print(f"repro.analysis: {len(CORPUS)} graphs x {len(PIPELINES)} "
+          f"pipelines x 2 levels (clean) + {len(MUTATIONS)} mutations")
+
+    all_cells: list[dict] = []
+    failures: list[str] = []
+    for level in ("default", "strict"):
+        cells, fails = run_clean_corpus(level)
+        all_cells += cells
+        failures += fails
+        n_diags = sum(len(c["diagnostics"]) for c in cells)
+        print(f"  clean corpus [{level:<7}]: {len(cells)} cells, "
+              f"{n_diags} non-silent finding(s), "
+              f"{len(fails)} failure(s)")
+
+    mut = run_mutations()
+    for r in mut:
+        if not r["caught"]:
+            failures.append(f"mutation {r['name']}: rule {r['rule']} did "
+                            f"not fire (found: {r['found']})")
+        elif not r["exact"]:
+            failures.append(f"mutation {r['name']}: expected exactly "
+                            f"{r['rule']}, found {r['found']}")
+    n_ok = sum(1 for r in mut if r["caught"] and r["exact"])
+    print(f"  mutation corpus: {n_ok}/{len(mut)} defects pinned to their "
+          "rule")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"clean": all_cells, "mutations": mut,
+                       "failures": failures, "ok": not failures}, f,
+                      indent=2)
+        print(f"  wrote {args.json}")
+
+    if failures:
+        print(f"\n{len(failures)} failure(s):")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        return 1
+    print("all analyses hold: no false positives, no escaped mutants")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

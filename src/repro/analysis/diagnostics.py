@@ -1,0 +1,158 @@
+"""Structured diagnostics: the currency every static analysis trades in.
+
+A :class:`Diagnostic` is one finding — a stable rule id (``"shape.mismatch"``,
+``"kv.leak"``), a :class:`Severity`, a human-readable message, and source-op
+provenance (node uid, op, the pre-folding ``src_op``, cluster id, and a
+free-form ``where`` naming the pass / kernel / slot it was found in).  A
+:class:`DiagnosticReport` aggregates findings from several analyses and
+decides — under an :class:`~repro.runtime.AnalysisPolicy` — whether they are
+fatal (:meth:`DiagnosticReport.raise_if_errors` → :class:`AnalysisError`).
+
+Rule-id convention: ``<area>.<defect>``, where the area names the analysis
+family (``graph`` / ``shape`` / ``dtype`` / ``alias`` / ``cluster`` /
+``vmem`` / ``exec`` / ``plan`` / ``tile`` / ``numerics`` / ``kv``).  Rule
+ids are API: the mutation corpus (``repro.analysis.mutations``) pins each
+seeded defect class to the rule that must catch it.
+"""
+
+from __future__ import annotations
+
+import enum
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Iterable, Iterator
+
+
+class Severity(enum.IntEnum):
+    """Ordered so policies can threshold (``>= ERROR`` is fatal)."""
+
+    INFO = 0
+    WARNING = 1
+    ERROR = 2
+
+    def __str__(self) -> str:
+        return self.name
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One finding from one rule, with source-op provenance."""
+
+    rule: str
+    severity: Severity
+    message: str
+    node: int | None = None        # graph node uid (``%uid`` in dumps)
+    op: str | None = None          # node op at analysis time
+    src_op: str | None = None      # original op (survives constant folding)
+    cluster: int | None = None     # fusion-cluster id, if relevant
+    where: str | None = None       # pass / kernel / slot / corpus location
+
+    def format(self) -> str:
+        loc = ""
+        if self.node is not None:
+            op = self.op or "?"
+            if self.src_op and self.src_op != self.op:
+                op = f"{op}<-{self.src_op}"
+            loc = f" %{self.node} ({op})"
+        if self.cluster is not None:
+            loc += f" [cluster {self.cluster}]"
+        tail = f"  ({self.where})" if self.where else ""
+        return f"{self.severity.name:<7} {self.rule}:{loc} {self.message}{tail}"
+
+    def to_json(self) -> dict[str, Any]:
+        d = asdict(self)
+        d["severity"] = self.severity.name
+        return d
+
+
+class AnalysisError(RuntimeError):
+    """Raised when a report holds fatal diagnostics; carries the report."""
+
+    def __init__(self, report: "DiagnosticReport", context: str = "") -> None:
+        self.report = report
+        head = f"static analysis failed{f' ({context})' if context else ''}"
+        lines = [head] + ["  " + d.format() for d in report]
+        super().__init__("\n".join(lines))
+
+
+@dataclass
+class DiagnosticReport:
+    """An ordered collection of diagnostics with severity accounting."""
+
+    diagnostics: list[Diagnostic] = field(default_factory=list)
+
+    # -- building -----------------------------------------------------------
+    def add(self, rule: str, severity: Severity, message: str,
+            **provenance: Any) -> Diagnostic:
+        d = Diagnostic(rule, severity, message, **provenance)
+        self.diagnostics.append(d)
+        return d
+
+    def extend(self, other: "DiagnosticReport | Iterable[Diagnostic]"
+               ) -> "DiagnosticReport":
+        items = other.diagnostics if isinstance(other, DiagnosticReport) \
+            else list(other)
+        self.diagnostics.extend(items)
+        return self
+
+    # -- querying -----------------------------------------------------------
+    def __iter__(self) -> Iterator[Diagnostic]:
+        return iter(self.diagnostics)
+
+    def __len__(self) -> int:
+        return len(self.diagnostics)
+
+    def __bool__(self) -> bool:
+        return bool(self.diagnostics)
+
+    @property
+    def rules(self) -> set[str]:
+        return {d.rule for d in self.diagnostics}
+
+    def by_rule(self, rule: str) -> list[Diagnostic]:
+        return [d for d in self.diagnostics if d.rule == rule]
+
+    def at_least(self, severity: Severity) -> list[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity >= severity]
+
+    @property
+    def errors(self) -> list[Diagnostic]:
+        return self.at_least(Severity.ERROR)
+
+    @property
+    def warnings(self) -> list[Diagnostic]:
+        return [d for d in self.diagnostics
+                if d.severity == Severity.WARNING]
+
+    def max_severity(self) -> Severity | None:
+        if not self.diagnostics:
+            return None
+        return max(d.severity for d in self.diagnostics)
+
+    # -- enforcement --------------------------------------------------------
+    def raise_if_errors(self, threshold: Severity = Severity.ERROR,
+                        context: str = "") -> None:
+        """Raise :class:`AnalysisError` if any finding reaches
+        ``threshold`` (strict mode thresholds at WARNING)."""
+        fatal = self.at_least(threshold)
+        if fatal:
+            raise AnalysisError(DiagnosticReport(fatal), context)
+
+    # -- presentation -------------------------------------------------------
+    def dump(self) -> str:
+        if not self.diagnostics:
+            return "no diagnostics"
+        return "\n".join(d.format() for d in self.diagnostics)
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {s.name: 0 for s in Severity}
+        for d in self.diagnostics:
+            out[d.severity.name] += 1
+        return out
+
+    def to_json(self) -> dict[str, Any]:
+        return {"counts": self.counts(),
+                "diagnostics": [d.to_json() for d in self.diagnostics]}
+
+    def dumps(self, indent: int = 2) -> str:
+        return json.dumps(self.to_json(), indent=indent)

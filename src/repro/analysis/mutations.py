@@ -1,0 +1,392 @@
+"""The mutation corpus: deliberately seeded defects, one per rule.
+
+Static analyses rot silently — a refactor loosens a rule and nothing
+notices until a real miscompile slips through.  This module pins every
+defect *class* the suite claims to catch to the rule that must catch it:
+each :class:`Mutation` starts from a clean program (usually a selfcheck
+corpus graph), seeds exactly one defect, runs the relevant checker, and
+asserts the finding set is **exactly** ``{expected_rule}`` at WARNING
+severity and above.  Run via ``python -m repro.analysis`` (CI) or
+:func:`run_mutations`.
+
+A mutation that stops firing means the rule regressed; a mutation that
+fires *extra* rules means a checker lost precision (false positives on
+defects are how false positives on clean code start).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Callable
+
+import numpy as np
+
+from .diagnostics import DiagnosticReport, Severity
+
+if TYPE_CHECKING:
+    from repro.compiler.graph import Graph, Node
+    from repro.compiler.lowering import Executable
+    from repro.runtime.policies import AnalysisPolicy
+
+    from .serving import CacheSnapshot
+
+
+@dataclass(frozen=True)
+class Mutation:
+    """One seeded defect: ``build()`` seeds it and runs the checker."""
+
+    name: str
+    rule: str                 # the rule that must (exclusively) fire
+    defect: str               # human description of the seeded bug
+    build: Callable[[], DiagnosticReport]
+
+
+def _graph(name: str, pipeline: tuple[str, ...] = ()) -> "Graph":
+    """A fresh selfcheck-corpus graph, optionally optimized."""
+    from repro.compiler.passes import PassManager
+    from repro.compiler.selfcheck import _build
+    from repro.runtime.policies import CompilerPolicy
+
+    g, _sources = _build(name)
+    if pipeline:
+        PassManager.from_policy(CompilerPolicy(pipeline=pipeline)).run(g)
+    return g
+
+
+def _policy(level: str = "default", **kw: Any) -> "AnalysisPolicy":
+    from repro.runtime.policies import AnalysisPolicy
+
+    return AnalysisPolicy(level=level, **kw)
+
+
+def _check(g: "Graph", **kw: Any) -> DiagnosticReport:
+    from .shapes import check_graph
+
+    return check_graph(g, _policy(), **kw)
+
+
+def _last_compute(g: "Graph") -> "Node":
+    """The final compute node — no consumers, so corrupting its metadata
+    trips exactly its own derived check and nothing downstream."""
+    for uid in reversed(g.order):
+        if g.nodes[uid].op not in ("input", "const"):
+            return g.nodes[uid]
+    raise AssertionError("corpus graph has no compute node")
+
+
+# -- graph / shape / dtype / alias -------------------------------------------
+
+
+def _shape_corrupted() -> DiagnosticReport:
+    g = _graph("chain")
+    node = _last_compute(g)
+    node.shape = tuple(s + 1 for s in node.shape) or (7,)
+    return _check(g)
+
+
+def _dtype_corrupted() -> DiagnosticReport:
+    g = _graph("chain")
+    _last_compute(g).dtype = np.dtype(np.int32)
+    return _check(g)
+
+
+def _broadcast_violated() -> DiagnosticReport:
+    # diamond ends in mul(left, broadcast_to(right, left.shape)); retarget
+    # the broadcast to a shape its input cannot expand to
+    g = _graph("diamond")
+    for uid in g.order:
+        n = g.nodes[uid]
+        if n.op == "broadcast_to":
+            src = g.nodes[n.inputs[0]].shape
+            bad = tuple(s + 1 for s in src) + (3,)
+            n.attrs = (bad,)
+            n.shape = bad
+            # keep the consumer consistent so only the broadcast trips
+            for c in g.order:
+                if uid in g.nodes[c].inputs:
+                    g.nodes[c].shape = bad
+            break
+    else:
+        raise AssertionError("diamond has no broadcast_to")
+    return _check(g)
+
+
+def _alias_double_write() -> DiagnosticReport:
+    # CSE merges the duplicate subexpression (alias src -> rep, src node
+    # removed); resurrect the merged node — now two writers exist
+    g = _graph("shared_subexpr", pipeline=("cse",))
+    assert g.alias, "cse produced no alias on shared_subexpr"
+    src, dst = next(iter(g.alias.items()))
+    rep = g.nodes[g.resolve(dst)]
+    g.add(dataclasses.replace(rep, uid=src))
+    return _check(g)
+
+
+def _alias_dangling() -> DiagnosticReport:
+    g = _graph("shared_subexpr", pipeline=("cse",))
+    assert g.alias
+    src = next(iter(g.alias))
+    g.alias[src] = 10 ** 9          # chain now ends at a nonexistent node
+    return _check(g)
+
+
+def _use_before_def() -> DiagnosticReport:
+    # schedule a node before its producer (a broken pass reordering)
+    g = _graph("chain")
+    last = g.order[-1]
+    g.order.remove(last)
+    g.order.insert(0, last)
+    return _check(g)
+
+
+def _orphan_output() -> DiagnosticReport:
+    g = _graph("chain")
+    g.outputs = g.outputs + (10 ** 9,)
+    return _check(g)
+
+
+# -- clusters / liveness / lowered schedule ----------------------------------
+
+
+def _cluster_output_dropped() -> DiagnosticReport:
+    from .liveness import check_clusters
+
+    g = _graph("chain", pipeline=("fuse",))
+    assert g.clusters, "fuse produced no cluster on chain"
+    cl = g.clusters[0]
+    assert cl.outputs, "cluster has no outputs to drop"
+    cl.outputs = cl.outputs[:-1]
+    return check_clusters(g, _policy())
+
+
+def _vmem_over_budget() -> DiagnosticReport:
+    from .liveness import check_clusters
+
+    g = _graph("chain", pipeline=("fuse",))
+    assert g.clusters
+    return check_clusters(g, _policy(vmem_limit_bytes=1))
+
+
+def _exec_double_write() -> DiagnosticReport:
+    from .liveness import check_executable
+
+    exe = _lowered("chain", lowering="eager")
+    op_steps = [s for s in exe.steps if hasattr(s, "uid")]
+    assert op_steps, "eager lowering produced no op steps"
+    exe.steps.append(op_steps[-1])            # same value written twice
+    return check_executable(exe)
+
+
+def _exec_war() -> DiagnosticReport:
+    from .liveness import check_executable
+
+    exe = _lowered("chain", lowering="jit", pipeline=("fuse",))
+    for s in exe.steps:
+        if hasattr(s, "outputs"):             # a ClusterStep
+            s.inputs = tuple(s.inputs) + (s.outputs[0],)
+            break
+    else:
+        raise AssertionError("no cluster step to corrupt")
+    return check_executable(exe)
+
+
+def _plan_double_free() -> DiagnosticReport:
+    from .liveness import check_memory_plan
+
+    exe = _lowered("chain", lowering="eager")
+    assert exe.frees, "chain frees nothing?"
+    return check_memory_plan(exe.allocs, exe.frees + (exe.frees[0],))
+
+
+def _lowered(name: str, lowering: str = "eager",
+             pipeline: tuple[str, ...] = ()) -> "Executable":
+    from repro.compiler.lowering import lower, memory_plan, snapshot_logical
+    from repro.compiler.passes import PassManager
+    from repro.compiler.selfcheck import _build
+    from repro.runtime.policies import CompilerPolicy
+
+    g, _sources = _build(name)
+    cpol = CompilerPolicy(pipeline=pipeline, lowering=lowering)
+    snap = snapshot_logical(g)
+    report = PassManager.from_policy(cpol).run(g)
+    return lower(g, cpol, report, interpret=True,
+                 plan=memory_plan(snap, g))
+
+
+# -- kernel tile contracts ----------------------------------------------------
+
+
+def _tile_oob() -> DiagnosticReport:
+    from .tiles import check_kernel_call
+
+    # k = 384 is lane-aligned (no alignment note) but 384 % bk=256 != 0
+    # and matmul's k loop does not mask — the last program reads OOB
+    return check_kernel_call("matmul", m=256, k=384, n=256,
+                             bm=128, bn=128, bk=256)
+
+
+def _tile_oversize() -> DiagnosticReport:
+    from .tiles import check_kernel_call
+
+    # flash_attention clamps bq/bk to s, so oversize must be seeded
+    # through the raw tiling checker (a contract bypass / new kernel)
+    from .tiles import TileDim, check_tiling
+
+    return check_tiling("custom", [TileDim("rows", 64, 128)])
+
+
+# -- paged KV cache -----------------------------------------------------------
+
+
+def _snap(table: Any, held: dict[int, list[int]], live: set[int],
+          num_blocks: int = 8) -> "CacheSnapshot":
+    from .serving import CacheSnapshot
+
+    return CacheSnapshot(num_blocks=num_blocks, block_size=4,
+                         block_bytes=1024, table=np.asarray(table, np.int32),
+                         held={s: tuple(b) for s, b in held.items()},
+                         live_blocks=frozenset(live), manager="seeded")
+
+
+def _kv_check(snap: "CacheSnapshot") -> DiagnosticReport:
+    from .serving import check_paged_cache
+
+    return check_paged_cache(snap)
+
+
+def _kv_leak() -> DiagnosticReport:
+    # block 3 live in the allocator, mapped by no slot
+    return _kv_check(_snap([[1, 2, 0], [0, 0, 0]],
+                           {0: [1, 2]}, live={0, 1, 2, 3}))
+
+
+def _kv_double_free() -> DiagnosticReport:
+    # slot 0 still maps block 2 but the allocator already freed it
+    return _kv_check(_snap([[1, 2, 0], [0, 0, 0]],
+                           {0: [1, 2]}, live={0, 1}))
+
+
+def _kv_trash_block() -> DiagnosticReport:
+    # slot 1 was handed physical block 0 — the reserved trash block
+    return _kv_check(_snap([[1, 0, 0], [0, 3, 0]],
+                           {0: [1], 1: [0, 3]}, live={0, 1, 3}))
+
+
+def _kv_double_map() -> DiagnosticReport:
+    # both slots map block 2: decode writes corrupt each other
+    return _kv_check(_snap([[1, 2, 0], [2, 0, 0]],
+                           {0: [1, 2], 1: [2]}, live={0, 1, 2}))
+
+
+def _kv_table_stale() -> DiagnosticReport:
+    # release() forgot to zero the table row past the held prefix
+    return _kv_check(_snap([[1, 5, 0], [0, 0, 0]],
+                           {0: [1]}, live={0, 1}))
+
+
+# -- numerics -----------------------------------------------------------------
+
+
+def _bf16_accum() -> DiagnosticReport:
+    from .numerics import check_numerics
+    from repro.compiler import graph as graph_mod
+    from repro.core.tensor import ops
+    from repro.core.tensor.lazy_backend import LazyBackend
+    from repro.runtime import session
+
+    import jax.numpy as jnp
+
+    lb = LazyBackend()
+    with session(backend=lb):
+        x = lb._lift(jnp.ones((64, 64), jnp.bfloat16))
+        y = ops.sum(ops.mul(x, x), axis=None, keepdims=False)
+    g, _sources = graph_mod.trace([y])
+    return check_numerics(g)
+
+
+MUTATIONS: tuple[Mutation, ...] = (
+    Mutation("shape_corrupted", "shape.mismatch",
+             "a pass rewrote a node but recorded the wrong shape",
+             _shape_corrupted),
+    Mutation("dtype_corrupted", "dtype.mismatch",
+             "a pass recorded the wrong dtype on a rewritten node",
+             _dtype_corrupted),
+    Mutation("broadcast_violated", "shape.broadcast",
+             "broadcast_to retargeted to a shape its input cannot reach",
+             _broadcast_violated),
+    Mutation("alias_double_write", "alias.double-write",
+             "CSE wrote the alias but left the merged node in the graph",
+             _alias_double_write),
+    Mutation("alias_dangling", "alias.dangling",
+             "an alias chain ends at a node no pass kept alive",
+             _alias_dangling),
+    Mutation("use_before_def", "graph.use-before-def",
+             "a pass reordered the schedule ahead of a producer",
+             _use_before_def),
+    Mutation("orphan_output", "graph.orphan-output",
+             "a program output resolves to no live node",
+             _orphan_output),
+    Mutation("cluster_output_dropped", "cluster.output-missing",
+             "fusion forgot a member that is consumed outside the cluster",
+             _cluster_output_dropped),
+    Mutation("vmem_over_budget", "vmem.over-budget",
+             "a fused cluster's peak residency exceeds the VMEM budget",
+             _vmem_over_budget),
+    Mutation("exec_double_write", "exec.double-write",
+             "the lowered schedule writes one logical value twice",
+             _exec_double_write),
+    Mutation("exec_war", "exec.war",
+             "a cluster kernel reads a value it also writes",
+             _exec_war),
+    Mutation("plan_double_free", "plan.double-free",
+             "the memory plan frees the same allocation twice",
+             _plan_double_free),
+    Mutation("tile_oob", "tile.oob",
+             "matmul launched with k not divisible by bk (unmasked)",
+             _tile_oob),
+    Mutation("tile_oversize", "tile.oversize",
+             "a block larger than the array extent it tiles",
+             _tile_oversize),
+    Mutation("kv_leak", "kv.leak",
+             "a live allocator block mapped by no slot",
+             _kv_leak),
+    Mutation("kv_double_free", "kv.double-free",
+             "a mapped block already freed in the allocator",
+             _kv_double_free),
+    Mutation("kv_trash_block", "kv.trash-block",
+             "a slot holds reserved physical block 0",
+             _kv_trash_block),
+    Mutation("kv_double_map", "kv.double-map",
+             "one physical block mapped by two slots",
+             _kv_double_map),
+    Mutation("kv_table_stale", "kv.table-stale",
+             "release() left a nonzero table entry past the held prefix",
+             _kv_table_stale),
+    Mutation("bf16_accum", "numerics.bf16-accum",
+             "a long reduction accumulating in bfloat16",
+             _bf16_accum),
+)
+
+
+def run_mutations() -> list[dict]:
+    """Run every mutation; each must be flagged by exactly its rule.
+
+    Returns one result row per mutation:
+    ``{"name", "rule", "caught", "exact", "found": [...]}`` where
+    ``caught`` means the intended rule fired and ``exact`` means no
+    *other* rule fired at WARNING severity or above.
+    """
+    results = []
+    for m in MUTATIONS:
+        report = m.build()
+        found = sorted({d.rule for d in report.at_least(Severity.WARNING)})
+        results.append({
+            "name": m.name,
+            "rule": m.rule,
+            "defect": m.defect,
+            "caught": m.rule in found,
+            "exact": found == [m.rule],
+            "found": found,
+        })
+    return results

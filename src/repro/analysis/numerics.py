@@ -1,0 +1,89 @@
+"""Numerics lint: precision hazards that type-check but destroy accuracy.
+
+Rules:
+
+``numerics.bf16-accum``
+    a reduction (``sum`` / ``prod`` / ``cumsum``) or ``matmul`` whose
+    operands *and* result are 16-bit floats — the accumulation happens in
+    the storage precision, so long reductions lose low-order bits.  The
+    fix is an f32 accumulator (``astype`` before the reduction, or
+    ``preferred_element_type`` on the contraction).  WARNING: legitimate
+    for short reductions, fatal for long ones — strict mode promotes it.
+
+``numerics.fp8-arith``
+    an fp8 value (``float8_e4m3*`` / ``float8_e5m2*``) flowing through
+    any compute op other than a cast.  In this codebase fp8 is a
+    *storage-only* format (the paged KV cache stores fp8 payload next to
+    f32 scales and dequantizes before attention); arithmetic directly on
+    fp8 means a missing dequantize/scale step.
+
+``numerics.fp8-no-scale``
+    a cast straight from fp8 to a compute dtype whose result feeds
+    arithmetic without any multiplicative rescale on the path — the
+    scale factor the fp8 KV convention requires was dropped.  Only
+    flagged when the cast's consumer is arithmetic (a bare cast feeding
+    an output is how a checkpoint dump looks and stays clean).
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax.numpy as jnp
+
+from .diagnostics import DiagnosticReport, Severity
+
+if TYPE_CHECKING:
+    from repro.compiler.graph import Graph
+
+_ACCUM_OPS = frozenset({"sum", "prod", "cumsum", "matmul"})
+_RESCALE_OPS = frozenset({"mul", "div"})
+
+
+def _is_16bit_float(dtype: object) -> bool:
+    d = jnp.dtype(dtype)
+    return jnp.issubdtype(d, jnp.floating) and d.itemsize == 2
+
+
+def _is_fp8(dtype: object) -> bool:
+    return "float8" in jnp.dtype(dtype).name
+
+
+def check_numerics(graph: "Graph",
+                   where: str | None = None) -> DiagnosticReport:
+    """Lint one graph for low-precision accumulation and fp8 misuse."""
+    report = DiagnosticReport()
+    consumers = graph.consumers()
+    for uid in graph.order:
+        node = graph.nodes[uid]
+        if node.op in ("input", "const"):
+            continue
+        prov = dict(node=uid, op=node.op, src_op=node.src_op,
+                    cluster=node.cluster, where=where)
+        in_dtypes = [graph.nodes[d].dtype for d in node.inputs
+                     if d in graph.nodes]
+        if (node.op in _ACCUM_OPS and _is_16bit_float(node.dtype)
+                and in_dtypes and all(map(_is_16bit_float, in_dtypes))):
+            report.add(
+                "numerics.bf16-accum", Severity.WARNING,
+                f"{node.op} accumulates in "
+                f"{jnp.dtype(node.dtype).name} — cast the operand to f32 "
+                "(or use an f32 accumulator) and round once at the end",
+                **prov)
+        if node.op != "astype" and (
+                _is_fp8(node.dtype) or any(map(_is_fp8, in_dtypes))):
+            report.add(
+                "numerics.fp8-arith", Severity.WARNING,
+                "arithmetic on an fp8 value — fp8 is storage-only here; "
+                "dequantize (cast + scale) before computing", **prov)
+        if (node.op == "astype" and in_dtypes and _is_fp8(in_dtypes[0])
+                and not _is_fp8(node.dtype)):
+            users = [graph.nodes[c] for c in consumers.get(uid, ())]
+            arith = [u for u in users if u.op not in ("astype",)]
+            if arith and not any(u.op in _RESCALE_OPS for u in arith):
+                report.add(
+                    "numerics.fp8-no-scale", Severity.WARNING,
+                    "fp8 payload cast up and consumed without a "
+                    "multiplicative rescale — the stored scale factor "
+                    "appears to be dropped", **prov)
+    return report

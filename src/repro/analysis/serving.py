@@ -1,0 +1,165 @@
+"""Serving-runtime checker: audit a :class:`PagedKVCache` state snapshot.
+
+The paged cache's correctness rests on three views agreeing: the host
+block tables (what the jitted steps will read/write through), the
+per-slot held-block lists (what the engine thinks each slot owns), and
+the memory manager's live-allocation set (what the allocator will hand
+out next).  :func:`check_paged_cache` cross-checks a
+:class:`CacheSnapshot` of all three:
+
+``kv.trash-block``     physical block 0 is the reserved trash block —
+                       idle-slot writes land there; a slot *holding* it
+                       (or the allocator freeing it) means real KV data
+                       is being written to / read from the dump site.
+``kv.double-map``      one physical block mapped by two slots (or twice
+                       by one): decode writes from either slot corrupt
+                       the other's cache.
+``kv.double-free``     a block still mapped in a table but free in the
+                       allocator: the next admission can be handed the
+                       same block → silent cross-request corruption.
+``kv.leak``            a block live in the allocator but unreferenced by
+                       any slot: capacity shrinks until spurious
+                       preemption / OOM.
+``kv.table-stale``     the device table disagrees with the held-block
+                       list (wrong id, or a nonzero entry past the held
+                       prefix — reads beyond the slot's length would hit
+                       a block it no longer owns).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Mapping, Sequence
+
+import numpy as np
+
+from .diagnostics import DiagnosticReport, Severity
+
+if TYPE_CHECKING:
+    from repro.serving.kv_cache import PagedKVCache
+
+
+@dataclass(frozen=True)
+class CacheSnapshot:
+    """A host-side moment-in-time view of a paged KV cache."""
+
+    num_blocks: int
+    block_size: int
+    block_bytes: int
+    table: Any                                   # int array [slots, max_blocks]
+    held: Mapping[int, tuple[int, ...]] = field(default_factory=dict)
+    live_blocks: frozenset[int] = frozenset()    # allocator's live view
+    manager: str = ""
+
+    def to_json(self) -> dict[str, Any]:
+        return {"num_blocks": self.num_blocks,
+                "block_size": self.block_size,
+                "block_bytes": self.block_bytes,
+                "held": {int(s): [int(b) for b in bs]
+                         for s, bs in self.held.items()},
+                "live_blocks": sorted(int(b) for b in self.live_blocks),
+                "manager": self.manager}
+
+
+def _live_offsets(manager: Any) -> Sequence[int]:
+    """Live arena offsets from a memory manager's internal block map.
+
+    Both built-in managers expose one (``_live`` for caching, ``_blocks``
+    for bump); a custom manager can provide ``live_offsets()``.
+    """
+    fn = getattr(manager, "live_offsets", None)
+    if callable(fn):
+        return tuple(fn())
+    for attr in ("_live", "_blocks"):
+        blocks = getattr(manager, attr, None)
+        if isinstance(blocks, dict):
+            return tuple(off for off, b in blocks.items()
+                         if not getattr(b, "free", False))
+    return ()
+
+
+def snapshot_cache(cache: "PagedKVCache") -> CacheSnapshot:
+    """Capture the three views of a live :class:`PagedKVCache`."""
+    live = frozenset(off // cache.block_bytes
+                     for off in _live_offsets(cache.manager))
+    held = {slot: tuple(bid for bid, _ptr in blocks)
+            for slot, blocks in cache._blocks.items()}
+    return CacheSnapshot(num_blocks=cache.num_blocks,
+                         block_size=cache.block_size,
+                         block_bytes=cache.block_bytes,
+                         table=np.array(cache.table, copy=True),
+                         held=held, live_blocks=live,
+                         manager=type(cache.manager).__name__)
+
+
+def check_paged_cache(snap: CacheSnapshot,
+                      where: str | None = None) -> DiagnosticReport:
+    """Audit one snapshot; every rule above is a pure function of it."""
+    report = DiagnosticReport()
+    table = np.asarray(snap.table)
+    owner: dict[int, int] = {}
+    for slot, blocks in sorted(snap.held.items()):
+        n = len(blocks)
+        for i, bid in enumerate(blocks):
+            if bid == 0:
+                report.add("kv.trash-block", Severity.ERROR,
+                           f"slot {slot} holds physical block 0 (the "
+                           "reserved trash block) at logical index "
+                           f"{i} — its KV writes collide with every idle "
+                           "slot's dump writes", where=where or f"slot {slot}")
+                continue
+            if not 0 <= bid < snap.num_blocks:
+                report.add("kv.bad-block", Severity.ERROR,
+                           f"slot {slot} holds out-of-range block {bid} "
+                           f"(pool has {snap.num_blocks})",
+                           where=where or f"slot {slot}")
+                continue
+            if bid in owner:
+                report.add("kv.double-map", Severity.ERROR,
+                           f"block {bid} mapped by slot {owner[bid]} and "
+                           f"slot {slot} — decode writes from one corrupt "
+                           "the other's cache", where=where or f"slot {slot}")
+            else:
+                owner[bid] = slot
+            if snap.live_blocks and bid not in snap.live_blocks:
+                report.add("kv.double-free", Severity.ERROR,
+                           f"block {bid} is mapped by slot {slot} but free "
+                           "in the allocator — it can be handed out again "
+                           "while still in use", where=where or f"slot {slot}")
+        if slot < table.shape[0]:
+            row = table[slot]
+            for i in range(min(n, table.shape[1])):
+                if int(row[i]) != blocks[i]:
+                    report.add("kv.table-stale", Severity.ERROR,
+                               f"slot {slot} table[{i}]={int(row[i])} but "
+                               f"the slot holds block {blocks[i]} there",
+                               where=where or f"slot {slot}")
+            for i in range(n, table.shape[1]):
+                if int(row[i]) != 0:
+                    report.add("kv.table-stale", Severity.ERROR,
+                               f"slot {slot} table[{i}]={int(row[i])} past "
+                               f"the {n} held blocks — reads beyond the "
+                               "slot's length hit a block it does not own",
+                               where=where or f"slot {slot}")
+    # table rows for slots with no held blocks must be all-trash
+    held_slots = set(snap.held)
+    for slot in range(table.shape[0]):
+        if slot in held_slots:
+            continue
+        nz = np.flatnonzero(table[slot])
+        if nz.size:
+            report.add("kv.table-stale", Severity.ERROR,
+                       f"idle slot {slot} table still maps block "
+                       f"{int(table[slot][nz[0]])} at index {int(nz[0])}",
+                       where=where or f"slot {slot}")
+    if snap.live_blocks:
+        if 0 not in snap.live_blocks:
+            report.add("kv.trash-block", Severity.ERROR,
+                       "the allocator freed physical block 0 — the trash "
+                       "block must stay reserved for idle-slot writes",
+                       where=where)
+        for bid in sorted(snap.live_blocks - {0} - set(owner)):
+            report.add("kv.leak", Severity.ERROR,
+                       f"block {bid} is live in the allocator but mapped "
+                       "by no slot — leaked capacity", where=where)
+    return report

@@ -1,0 +1,212 @@
+"""Structural IR verification + shape/dtype abstract interpretation.
+
+:func:`check_graph` promotes the compiler's stringly ``Graph.validate()``
+into structured :class:`~repro.analysis.diagnostics.Diagnostic`s — and
+``Graph.validate()`` now delegates here, so there is one verifier.
+
+Two layers:
+
+* **structural rules** — topo order, dangling deps, orphan outputs, alias
+  integrity (including the *double-write* case: a CSE-merged node left in
+  the graph next to its surviving representative, so both would compute
+  and write back the same logical value);
+* **abstract interpretation** — shapes and dtypes are re-derived from the
+  node's inputs without executing anything.  Ops with closed-form rules
+  (the elementwise/broadcast set, reductions, shape ops) are re-derived at
+  every level from pure-Python broadcast arithmetic; at ``strict`` level
+  the remaining non-opaque ops are re-derived through ``jax.eval_shape``.
+  A recorded shape/dtype a rewrite silently corrupted surfaces as
+  ``shape.mismatch`` / ``dtype.mismatch`` instead of wrong numerics.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .diagnostics import DiagnosticReport, Severity
+
+if TYPE_CHECKING:  # import only for annotations: keeps import-time acyclic
+    from repro.compiler.graph import Graph, Node
+    from repro.runtime.policies import AnalysisPolicy
+
+_COMPARISONS = frozenset({"eq", "ne", "lt", "le", "gt", "ge"})
+_LOGICAL = frozenset({"logical_and", "logical_or", "logical_not", "isnan"})
+_REDUCTIONS = frozenset({"sum", "max", "min", "prod"})
+#: ops whose dtype rule is "same as (equal-dtyped) inputs" is unsafe
+_DTYPE_OPAQUE = frozenset({"div", "argmax"})
+
+
+def _elementwise_ops() -> frozenset[str]:
+    from repro.compiler.graph import ELEMENTWISE_OPS
+
+    return ELEMENTWISE_OPS
+
+
+def _reduce_shape(shape: tuple[int, ...], axis: Any,
+                  keepdims: bool) -> tuple[int, ...]:
+    if axis is None:
+        axes = tuple(range(len(shape)))
+    else:
+        axes = (axis,) if isinstance(axis, int) else tuple(axis)
+        axes = tuple(a % len(shape) for a in axes)
+    if keepdims:
+        return tuple(1 if i in axes else s for i, s in enumerate(shape))
+    return tuple(s for i, s in enumerate(shape) if i not in axes)
+
+
+def infer_node(node: "Node", in_shapes: list[tuple[int, ...]],
+               in_dtypes: list[Any]
+               ) -> tuple[tuple[int, ...] | None, Any | None]:
+    """Closed-form shape/dtype re-derivation for ops we have rules for.
+
+    Returns ``(shape, dtype)`` with ``None`` meaning "no rule — do not
+    check" (soundness over coverage: a rule must never disagree with what
+    the op actually produces).  Raises ``ValueError`` on broadcast
+    violations — the caller reports those as ``shape.broadcast``.
+    """
+    op, attrs = node.op, node.attrs
+    shape: tuple[int, ...] | None = None
+    dtype: Any | None = None
+    if op in _elementwise_ops():
+        shape = tuple(np.broadcast_shapes(*in_shapes)) if in_shapes else None
+        if op in _COMPARISONS or op in _LOGICAL:
+            dtype = jnp.dtype(bool)
+        elif op == "astype" and attrs:
+            dtype = jnp.dtype(attrs[0])
+        elif op == "where":
+            if (len(in_dtypes) == 3
+                    and jnp.dtype(in_dtypes[1]) == jnp.dtype(in_dtypes[2])):
+                dtype = jnp.dtype(in_dtypes[1])
+        elif op not in _DTYPE_OPAQUE and in_dtypes:
+            uniq = {jnp.dtype(d) for d in in_dtypes}
+            if len(uniq) == 1 and next(iter(uniq)) != jnp.dtype(bool):
+                dtype = next(iter(uniq))
+    elif op in _REDUCTIONS and attrs is not None and len(attrs) == 2:
+        axis, keepdims = attrs
+        shape = _reduce_shape(in_shapes[0], axis, bool(keepdims))
+        if jnp.issubdtype(in_dtypes[0], jnp.floating):
+            dtype = jnp.dtype(in_dtypes[0])
+    elif op == "cumsum":
+        shape = in_shapes[0]
+        if jnp.issubdtype(in_dtypes[0], jnp.floating):
+            dtype = jnp.dtype(in_dtypes[0])
+    elif op == "argmax" and attrs is not None and len(attrs) == 1:
+        shape = _reduce_shape(in_shapes[0], attrs[0], False)
+    elif op == "reshape" and attrs is not None and len(attrs) == 1:
+        new = tuple(attrs[0])
+        if -1 not in new:
+            if int(np.prod(new or (1,))) != int(np.prod(in_shapes[0] or (1,))):
+                raise ValueError(
+                    f"reshape {in_shapes[0]} -> {new} changes element count")
+            shape, dtype = new, jnp.dtype(in_dtypes[0])
+    elif op == "transpose" and attrs is not None and len(attrs) == 1:
+        axes = attrs[0]
+        src = in_shapes[0]
+        if axes is None:
+            axes = tuple(reversed(range(len(src))))
+        shape = tuple(src[a] for a in axes)
+        dtype = jnp.dtype(in_dtypes[0])
+    elif op == "broadcast_to" and attrs is not None and len(attrs) == 1:
+        target = tuple(attrs[0])
+        np.broadcast_shapes(in_shapes[0], target)   # raises if illegal
+        shape, dtype = target, jnp.dtype(in_dtypes[0])
+    elif op == "full" and attrs is not None and len(attrs) == 3:
+        shape, dtype = tuple(attrs[0]), jnp.dtype(attrs[2])
+    elif op == "iota" and attrs is not None and len(attrs) == 3:
+        shape, dtype = tuple(attrs[1]), jnp.dtype(attrs[0])
+    return shape, dtype
+
+
+def _check_derived(report: DiagnosticReport, graph: "Graph", node: "Node",
+                  strict: bool, where: str | None) -> None:
+    """Compare the node's recorded shape/dtype against a re-derivation."""
+    in_shapes = [graph.nodes[d].shape for d in node.inputs]
+    in_dtypes = [graph.nodes[d].dtype for d in node.inputs]
+    prov = dict(node=node.uid, op=node.op, src_op=node.src_op,
+                cluster=node.cluster, where=where)
+    try:
+        shape, dtype = infer_node(node, in_shapes, in_dtypes)
+    except ValueError as e:
+        report.add("shape.broadcast", Severity.ERROR,
+                   f"operands do not broadcast: {e}", **prov)
+        return
+    if shape is None and dtype is None and strict and node.fn is not None:
+        # no closed-form rule: re-derive through the op itself
+        try:
+            structs = [jax.ShapeDtypeStruct(s, d)
+                       for s, d in zip(in_shapes, in_dtypes)]
+            out = jax.eval_shape(node.fn, *structs)
+            shape, dtype = tuple(out.shape), jnp.dtype(out.dtype)
+        except Exception as e:  # noqa: BLE001 - report, don't crash
+            report.add("shape.infer-failed", Severity.ERROR,
+                       f"shape inference failed: {e}", **prov)
+            return
+    if shape is not None and tuple(shape) != tuple(node.shape):
+        report.add("shape.mismatch", Severity.ERROR,
+                   f"recorded shape {tuple(node.shape)} but op derives "
+                   f"{tuple(shape)}", **prov)
+    if dtype is not None and jnp.dtype(dtype) != jnp.dtype(node.dtype):
+        report.add("dtype.mismatch", Severity.ERROR,
+                   f"recorded dtype {jnp.dtype(node.dtype).name} but op "
+                   f"derives {jnp.dtype(dtype).name}", **prov)
+
+
+def check_graph(graph: "Graph", policy: "AnalysisPolicy | None" = None,
+                where: str | None = None) -> DiagnosticReport:
+    """Structural + shape/dtype verification of one :class:`Graph`."""
+    from repro.runtime.policies import AnalysisPolicy
+
+    policy = policy or AnalysisPolicy()
+    report = DiagnosticReport()
+    if not policy.enabled:
+        return report
+    strict = policy.strict
+    seen: set[int] = set()
+    if set(graph.order) != set(graph.nodes):
+        report.add("graph.order", Severity.ERROR,
+                   "order and nodes disagree on membership", where=where)
+    for uid in graph.order:
+        node = graph.nodes.get(uid)
+        if node is None:
+            continue
+        prov = dict(node=uid, op=node.op, src_op=node.src_op,
+                    cluster=node.cluster, where=where)
+        dangling = False
+        for d in node.inputs:
+            if d not in graph.nodes:
+                report.add("graph.dangling-dep", Severity.ERROR,
+                           f"dangling dep %{d}", **prov)
+                dangling = True
+            elif d not in seen:
+                report.add("graph.use-before-def", Severity.ERROR,
+                           f"dep %{d} not scheduled before use", **prov)
+        if node.op in ("input", "const"):
+            if node.op == "const" and node.value is None:
+                report.add("graph.const-no-value", Severity.ERROR,
+                           "const without a value", **prov)
+        elif node.fn is None:
+            report.add("graph.no-fn", Severity.ERROR,
+                       "compute node without fn", **prov)
+        elif node.attrs is not None and not dangling:
+            _check_derived(report, graph, node, strict, where)
+        seen.add(uid)
+    for o in graph.outputs:
+        if graph.resolve(o) not in graph.nodes:
+            report.add("graph.orphan-output", Severity.ERROR,
+                       f"output %{o} resolves to no live node",
+                       node=o, where=where)
+    for src, dst in graph.alias.items():
+        if src in graph.nodes:
+            report.add("alias.double-write", Severity.ERROR,
+                       f"alias source %{src} still present — the merged "
+                       f"node and its representative %{dst} would both "
+                       "compute and write back", node=src, where=where)
+        if graph.resolve(dst) not in graph.nodes:
+            report.add("alias.dangling", Severity.ERROR,
+                       f"alias target of %{src} dangles (chain ends at a "
+                       "removed node)", node=src, where=where)
+    return report

@@ -1,0 +1,60 @@
+"""Orchestration: run the full analysis suite over one compiled program.
+
+:func:`analyze_graph` is the hook ``compile_graph`` / the lazy backend's
+materialize call under a Session's :class:`~repro.runtime.AnalysisPolicy`:
+structural+shape verification, cluster/liveness/VMEM checks, the numerics
+lint, and — in strict mode — the lowered-schedule and memory-plan checks.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from .diagnostics import DiagnosticReport
+from .liveness import check_clusters, check_executable, check_memory_plan
+from .numerics import check_numerics
+from .shapes import check_graph
+from .tiles import check_cluster_specs
+
+if TYPE_CHECKING:
+    from repro.compiler.graph import Graph
+    from repro.compiler.lowering import Executable
+    from repro.runtime.policies import AnalysisPolicy
+
+__all__ = ["analyze_graph", "analyze_and_raise"]
+
+
+def analyze_graph(graph: "Graph", policy: "AnalysisPolicy | None" = None,
+                  exe: "Executable | None" = None,
+                  where: str | None = None,
+                  on_tpu: bool = False) -> DiagnosticReport:
+    """Run every applicable analysis; returns the merged report.
+
+    Enforcement (raising on fatal findings) is the caller's decision via
+    ``report.raise_if_errors(policy.error_threshold)`` — so callers that
+    only want the report (benchmarks, the CLI) never catch exceptions.
+    """
+    from repro.runtime.policies import AnalysisPolicy
+
+    policy = policy or AnalysisPolicy()
+    report = DiagnosticReport()
+    if not policy.enabled:
+        return report
+    report.extend(check_graph(graph, policy, where=where))
+    report.extend(check_clusters(graph, policy, where=where))
+    report.extend(check_cluster_specs(graph, policy, on_tpu=on_tpu,
+                                      where=where))
+    report.extend(check_numerics(graph, where=where))
+    if exe is not None and policy.strict:
+        report.extend(check_executable(exe, where=where))
+        report.extend(check_memory_plan(exe.allocs, exe.frees, where=where))
+    return report
+
+
+def analyze_and_raise(graph: "Graph", policy: "AnalysisPolicy",
+                      exe: "Executable | None" = None,
+                      where: str | None = None) -> DiagnosticReport:
+    """:func:`analyze_graph` + enforcement at the policy's threshold."""
+    report = analyze_graph(graph, policy, exe=exe, where=where)
+    report.raise_if_errors(policy.error_threshold, context=where or "")
+    return report

@@ -45,17 +45,36 @@ def optimize(graph: graph_mod.Graph, policy: CompilerPolicy
 
 
 def compile_graph(graph: graph_mod.Graph, policy: CompilerPolicy,
-                  interpret: bool | None = None) -> Executable:
+                  interpret: bool | None = None,
+                  analysis: Any | None = None) -> Executable:
     """Optimize + lower a traced graph in one step.
 
     The telemetry memory plan is computed from the pre-pass logical
     structure (see :func:`repro.compiler.lowering.memory_plan`) so CSE/DCE
     shrink it but folding/fusion — execution strategies — do not.
+
+    ``analysis`` (an :class:`~repro.runtime.AnalysisPolicy`) runs the
+    static verifier over the result: at ``"strict"`` additionally between
+    every pass and over the lowered step schedule + memory plan.  Findings
+    at/above the policy's threshold raise
+    :class:`~repro.analysis.AnalysisError`; the full report (including
+    non-fatal lint) is attached as ``exe.diagnostics``.
     """
     snapshot = lowering_mod.snapshot_logical(graph)
-    report = optimize(graph, policy)
+    if analysis is not None and analysis.enabled:
+        verify = analysis if analysis.strict else None
+        report = PassManager.from_policy(policy).run(graph, verify=verify)
+    else:
+        report = optimize(graph, policy)
     plan = lowering_mod.memory_plan(snapshot, graph)
-    return lower(graph, policy, report, interpret=interpret, plan=plan)
+    exe = lower(graph, policy, report, interpret=interpret, plan=plan)
+    if analysis is not None and analysis.enabled:
+        from repro.analysis.suite import analyze_graph
+
+        diags = analyze_graph(graph, analysis, exe=exe)
+        exe.diagnostics = diags
+        diags.raise_if_errors(analysis.error_threshold)
+    return exe
 
 
 def describe_report(report: list[PassStats], exe: Executable | None = None
@@ -72,14 +91,21 @@ class CompiledFunction:
     """The callable ``repro.compile`` returns; one cache entry per input
     signature (shapes/dtypes of positional args + static kwargs)."""
 
-    def __init__(self, fn: Callable, policy: CompilerPolicy | None = None):
+    def __init__(self, fn: Callable, policy: CompilerPolicy | None = None,
+                 check: str | None = None) -> None:
         self.fn = fn
         self.policy = policy
+        self.check = check
         self._cache: dict[tuple, tuple] = {}
         self.trace_count = 0
         self.last_executable: Executable | None = None
         self.__name__ = getattr(fn, "__name__", "compiled")
         self.__doc__ = getattr(fn, "__doc__", None)
+        if check is not None:
+            # validate eagerly so a typo'd level fails at decoration time
+            from repro.runtime import AnalysisPolicy
+
+            AnalysisPolicy(level=check)
 
     @property
     def cache_size(self) -> int:
@@ -88,7 +114,13 @@ class CompiledFunction:
     def _policy(self) -> CompilerPolicy:
         return self.policy or current_session().compiler
 
-    def _key(self, args, kwargs) -> tuple:
+    def _analysis(self) -> Any:
+        base = current_session().analysis
+        if self.check is None:
+            return base
+        return base.replace(level=self.check)
+
+    def _key(self, args: tuple[Any, ...], kwargs: dict[str, Any]) -> tuple:
         sig = []
         for a in args:
             arr = jnp.asarray(a)
@@ -101,9 +133,14 @@ class CompiledFunction:
                 "repro.compile: keyword arguments must be hashable statics "
                 "(they are part of the program cache key); pass arrays as "
                 "positional arguments instead") from None
-        return (tuple(sig), kw, self._policy())
+        # the analysis policy is part of the key: a program cached with
+        # checks off must not satisfy a strict-session call unverified
+        return (tuple(sig), kw, self._policy(), self._analysis())
 
-    def _trace(self, args, kwargs, policy):
+    def _trace(self, args: tuple[Any, ...], kwargs: dict[str, Any],
+               policy: CompilerPolicy, analysis: Any = None
+               ) -> tuple[Executable, dict[int, int | None], dict[int, Any],
+                          Any, bool]:
         from repro.core.tensor.lazy_backend import LazyBackend
 
         lb = LazyBackend()
@@ -135,16 +172,16 @@ class CompiledFunction:
                 mid_trace_capture |= src.uid > trace_watermark
         cacheable = (policy.cache_programs and not mid_trace_capture
                      and g.signature() is not None)
-        exe = compile_graph(g, policy)
+        exe = compile_graph(g, policy, analysis=analysis)
         return exe, arg_pos, captured, treedef, cacheable
 
-    def __call__(self, *args, **kwargs):
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
         policy = self._policy()
         key = self._key(args, kwargs)
         entry = self._cache.get(key)
         if entry is None:
             exe, arg_pos, captured, treedef, cacheable = self._trace(
-                args, kwargs, policy)
+                args, kwargs, policy, self._analysis())
             if cacheable:
                 self._cache[key] = (exe, arg_pos, captured, treedef)
         else:
@@ -160,13 +197,21 @@ class CompiledFunction:
 
 
 def compile(fn: Callable | None = None, *,  # noqa: A001 - torch.compile idiom
-            policy: CompilerPolicy | None = None):
+            policy: CompilerPolicy | None = None,
+            check: str | None = None
+            ) -> "CompiledFunction | Callable[[Callable], CompiledFunction]":
     """Decorator: compile ``fn`` through the graph-IR pipeline.
 
     ``policy=None`` picks up the active session's ``CompilerPolicy`` at
     call time (so ``with repro.session(compiler=...)`` swaps the pipeline
     without retouching the function).
+
+    ``check`` overrides the static-analysis level for this function only:
+    ``"off"`` / ``"default"`` / ``"strict"`` (see
+    :class:`repro.runtime.AnalysisPolicy`).  ``None`` inherits the active
+    session's level; the session's other analysis knobs (VMEM budget)
+    apply either way.
     """
     if fn is None:
-        return lambda f: CompiledFunction(f, policy)
-    return CompiledFunction(fn, policy)
+        return lambda f: CompiledFunction(f, policy, check)
+    return CompiledFunction(fn, policy, check)

@@ -28,7 +28,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.tensor.lazy_backend import _ELEMENTWISE
@@ -56,7 +55,7 @@ class Node:
     src_op: str = ""           # original op (survives folding), telemetry tag
     cluster: int | None = None  # fusion-pass assignment
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not self.src_op:
             self.src_op = self.op
 
@@ -147,57 +146,25 @@ class Graph:
     def validate(self) -> list[str]:
         """IR invariants; returns human-readable violations (empty = ok).
 
-        Checked: topo order, dangling deps, orphan outputs, alias
-        integrity, and — for non-opaque compute nodes — that the recorded
-        shape/dtype still matches what the op actually produces (re-derived
-        via ``jax.eval_shape``), so a rewrite cannot silently corrupt
-        metadata.
+        Delegates to the structured verifier
+        (:func:`repro.analysis.check_graph`, at ``strict`` level so every
+        non-opaque compute node's recorded shape/dtype is re-derived) and
+        flattens the :class:`~repro.analysis.Diagnostic`s back to strings
+        — there is exactly one verifier; this is the legacy view of it.
         """
-        problems: list[str] = []
-        seen: set[int] = set()
-        if set(self.order) != set(self.nodes):
-            problems.append("order and nodes disagree on membership")
-        for uid in self.order:
-            node = self.nodes.get(uid)
-            if node is None:
-                continue
-            for d in node.inputs:
-                if d not in self.nodes:
-                    problems.append(f"%{uid} ({node.op}): dangling dep %{d}")
-                elif d not in seen:
-                    problems.append(f"%{uid} ({node.op}): dep %{d} not "
-                                    "scheduled before use")
-            if node.op in ("input", "const"):
-                if node.op == "const" and node.value is None:
-                    problems.append(f"%{uid}: const without a value")
-            elif node.fn is None:
-                problems.append(f"%{uid} ({node.op}): compute node without fn")
-            elif node.attrs is not None:
-                try:
-                    structs = [jax.ShapeDtypeStruct(self.nodes[d].shape,
-                                                    self.nodes[d].dtype)
-                               for d in node.inputs]
-                    out = jax.eval_shape(node.fn, *structs)
-                    if (tuple(out.shape) != node.shape
-                            or jnp.dtype(out.dtype) != jnp.dtype(node.dtype)):
-                        problems.append(
-                            f"%{uid} ({node.op}): recorded "
-                            f"{node.type_str()} but op produces "
-                            f"{jnp.dtype(out.dtype).name}"
-                            f"[{','.join(map(str, out.shape))}]")
-                except Exception as e:  # noqa: BLE001 - report, don't crash
-                    problems.append(f"%{uid} ({node.op}): shape inference "
-                                    f"failed: {e}")
-            seen.add(uid)
-        for o in self.outputs:
-            if self.resolve(o) not in self.nodes:
-                problems.append(f"orphan output %{o}")
-        for src, dst in self.alias.items():
-            if src in self.nodes:
-                problems.append(f"alias source %{src} still present")
-            if self.resolve(dst) not in self.nodes:
-                problems.append(f"alias target of %{src} dangles")
-        return problems
+        from repro.analysis.shapes import check_graph
+        from repro.runtime.policies import AnalysisPolicy
+
+        return [d.format()
+                for d in check_graph(self, AnalysisPolicy(level="strict"))]
+
+    def check(self, policy: Any = None, where: str | None = None) -> Any:
+        """Structured form of :meth:`validate`: a
+        :class:`repro.analysis.DiagnosticReport` at the given
+        :class:`~repro.runtime.AnalysisPolicy` level."""
+        from repro.analysis.shapes import check_graph
+
+        return check_graph(self, policy, where=where)
 
     # -- presentation -------------------------------------------------------
     def dump(self) -> str:
@@ -263,7 +230,7 @@ def trace(roots: Iterable[Any]) -> tuple[Graph, dict[int, Any]]:
     canon: dict[int, int] = {}       # LazyTensor.uid -> canonical uid
     roots = list(roots)
 
-    def lift_raw(d) -> int:
+    def lift_raw(d: Any) -> int:
         # defensive: a raw python/array dep becomes an (opaque) const
         arr = jnp.asarray(d)
         cid = len(graph.order)
@@ -271,7 +238,7 @@ def trace(roots: Iterable[Any]) -> tuple[Graph, dict[int, Any]]:
                        attrs=None, value=arr))
         return cid
 
-    def emit(lt) -> int:
+    def emit(lt: Any) -> int:
         cid = len(graph.order)
         canon[lt.uid] = cid
         if lt.value is not None:
@@ -286,7 +253,7 @@ def trace(roots: Iterable[Any]) -> tuple[Graph, dict[int, Any]]:
         sources[cid] = lt
         return cid
 
-    def visit(root) -> int:
+    def visit(root: Any) -> int:
         # iterative post-order: deep chains must not hit the recursion limit
         stack: list[tuple[Any, bool]] = [(root, False)]
         while stack:
@@ -302,7 +269,7 @@ def trace(roots: Iterable[Any]) -> tuple[Graph, dict[int, Any]]:
                     stack.append((d, False))
         return canon[root.uid]
 
-    out_ids = []
+    out_ids: list[int] = []
     for r in roots:
         if hasattr(r, "deps"):
             out_ids.append(visit(r))

@@ -61,6 +61,7 @@ class Executable:
     allocs: tuple[tuple[int, int, str], ...]   # (uid, nbytes, tag)
     frees: tuple[int, ...]
     report: list[PassStats] = field(default_factory=list)
+    diagnostics: Any = None      # DiagnosticReport when analysis ran
 
     @property
     def n_dispatches(self) -> int:
@@ -93,11 +94,14 @@ class Executable:
         return [env[self.resolve(o)] for o in self.outputs]
 
     def describe(self) -> dict:
-        return {"dispatches": self.n_dispatches,
-                "pallas_kernels": self.n_kernels,
-                "steps": [s.kind if isinstance(s, ClusterStep) else "op"
-                          for s in self.steps],
-                "passes": [s.describe() for s in self.report]}
+        out = {"dispatches": self.n_dispatches,
+               "pallas_kernels": self.n_kernels,
+               "steps": [s.kind if isinstance(s, ClusterStep) else "op"
+                         for s in self.steps],
+               "passes": [s.describe() for s in self.report]}
+        if self.diagnostics is not None:
+            out["diagnostics"] = self.diagnostics.counts()
+        return out
 
 
 def snapshot_logical(graph: Graph) -> list[tuple]:
@@ -108,7 +112,8 @@ def snapshot_logical(graph: Graph) -> list[tuple]:
             for uid in graph.order]
 
 
-def memory_plan(snapshot: list[tuple], graph: Graph):
+def memory_plan(snapshot: list[tuple], graph: Graph
+                ) -> tuple[tuple, tuple]:
     """Alloc/free schedule over *surviving* logical nodes.
 
     Computed from the pre-pass snapshot with the optimized graph's alias
@@ -155,7 +160,7 @@ def memory_plan(snapshot: list[tuple], graph: Graph):
     return tuple(allocs), tuple(frees)
 
 
-def lower(graph: Graph, policy, report: list[PassStats] | None = None,
+def lower(graph: Graph, policy: Any, report: list[PassStats] | None = None,
           interpret: bool | None = None,
           plan: tuple | None = None) -> Executable:
     """Lower an optimized graph under a ``CompilerPolicy``.

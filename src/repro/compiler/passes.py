@@ -100,7 +100,7 @@ class ConstantFoldPass(Pass):
 
     name = "fold"
 
-    def __init__(self, size_limit: int = 1 << 16):
+    def __init__(self, size_limit: int = 1 << 16) -> None:
         self.size_limit = size_limit
 
     def run(self, graph: Graph) -> dict[str, Any]:
@@ -161,7 +161,7 @@ class FusionPass(Pass):
 
     name = "fuse"
 
-    def __init__(self, min_cluster_size: int = 2):
+    def __init__(self, min_cluster_size: int = 2) -> None:
         self.min_cluster_size = min_cluster_size
 
     def run(self, graph: Graph) -> dict[str, Any]:
@@ -260,11 +260,11 @@ PASS_REGISTRY: dict[str, type[Pass]] = {
 class PassManager:
     """Runs a pipeline of passes, collecting :class:`PassStats` per pass."""
 
-    def __init__(self, passes: list[Pass]):
+    def __init__(self, passes: list[Pass]) -> None:
         self.passes = list(passes)
 
     @classmethod
-    def from_policy(cls, policy) -> "PassManager":
+    def from_policy(cls, policy: Any) -> "PassManager":
         passes: list[Pass] = []
         for name in policy.pipeline:
             if name not in PASS_REGISTRY:
@@ -278,11 +278,23 @@ class PassManager:
                 passes.append(PASS_REGISTRY[name]())
         return cls(passes)
 
-    def run(self, graph: Graph) -> list[PassStats]:
+    def run(self, graph: Graph, *, verify: Any = None) -> list[PassStats]:
+        """Run the pipeline; with ``verify`` (an
+        :class:`~repro.runtime.AnalysisPolicy`) the structured IR
+        verifier runs after every pass and raises
+        :class:`~repro.analysis.AnalysisError` naming the pass that
+        broke the invariant — a miscompile caught at the rewrite that
+        introduced it, not at the numerics it corrupts."""
         report: list[PassStats] = []
         for p in self.passes:
             nb, eb = len(graph.order), graph.n_edges()
             extra = p.run(graph)
             report.append(PassStats(p.name, nb, len(graph.order),
                                     eb, graph.n_edges(), extra))
+            if verify is not None and verify.enabled:
+                from repro.analysis.shapes import check_graph
+
+                check_graph(graph, verify, where=f"after {p.name}") \
+                    .raise_if_errors(verify.error_threshold,
+                                     context=f"after pass {p.name!r}")
         return report

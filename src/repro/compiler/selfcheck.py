@@ -19,7 +19,7 @@ Exit status 0 = all clean; 1 = violations (printed).
 from __future__ import annotations
 
 import sys
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,7 @@ from .lowering import lower, memory_plan, snapshot_logical
 from .passes import PASS_REGISTRY, PassManager
 
 
-def _lazy_backend():
+def _lazy_backend() -> Any:
     from repro.core.tensor.lazy_backend import LazyBackend
 
     return LazyBackend()
@@ -44,14 +44,14 @@ def _lazy_backend():
 # genuinely dead branches for DCE to collect)
 
 
-def _chain(ops, x):
+def _chain(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     y = x
     for _ in range(6):
         y = ops.tanh(ops.mul(ops.add(y, y), ops.full_like(y, 0.5)))
     return [y], None
 
 
-def _shared_subexpr(ops, x):
+def _shared_subexpr(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     # the same subexpression built twice -> CSE must merge, frees must
     # still be emitted exactly once per surviving node
     a1 = ops.exp(ops.mul(x, x))
@@ -59,39 +59,39 @@ def _shared_subexpr(ops, x):
     return [ops.add(ops.tanh(a1), ops.sqrt(ops.abs(a2)))], None
 
 
-def _dead_branch(ops, x):
+def _dead_branch(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     live = ops.tanh(ops.add(x, x))
     dead = ops.exp(ops.mul(x, ops.full_like(x, 3.0)))
     return [live, ops.add(dead, dead)], (0,)
 
 
-def _diamond(ops, x):
+def _diamond(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     a = ops.add(x, ops.full_like(x, 1.0))
     left = ops.exp(a)
     right = ops.sum(a, axis=-1, keepdims=True)   # reduction splits clusters
     return [ops.mul(left, ops.broadcast_to(right, left.shape))], None
 
 
-def _reduce_matmul(ops, x):
+def _reduce_matmul(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     w = ops.full((x.shape[-1], 4), 0.1)
     h = ops.relu(ops.matmul(x, w))
     return [ops.sum(ops.mul(h, h), axis=None, keepdims=False)], None
 
 
-def _mixed_dtype(ops, x):
+def _mixed_dtype(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     lo = ops.astype(x, jnp.bfloat16)
     y = ops.astype(ops.mul(lo, lo), jnp.float32)
     mask = ops.ge(x, ops.full_like(x, 0.0))
     return [ops.where(mask, y, ops.neg(y))], None
 
 
-def _const_heavy(ops, x):
+def _const_heavy(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     a = ops.mul(ops.full((4, 8), 2.0), ops.full((4, 8), 3.0))
     b = ops.add(a, ops.iota(jnp.float32, (4, 8), 1))
     return [ops.add(x, b)], None
 
 
-def _random_opaque(ops, x):
+def _random_opaque(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     key = jax.random.PRNGKey(0)
     noise = ops.random_uniform(key, x.shape, jnp.float32, 0.0, 1.0)
     return [ops.add(x, ops.mul(noise, noise))], None
@@ -119,7 +119,7 @@ PIPELINES: tuple[tuple[str, ...], ...] = (
 LOWERINGS = ("eager", "jit", "auto")
 
 
-def _build(name: str):
+def _build(name: str) -> tuple[graph_mod.Graph, dict[int, Any]]:
     from repro.core.tensor import ops
 
     lb = _lazy_backend()

@@ -129,6 +129,7 @@ class LazyBackend(TensorBackend):
         self.program_cache_hits = 0
         self.last_compile_report: dict | None = None
         self.last_compile_policy = None    # the policy that produced it
+        self.last_analysis = None          # DiagnosticReport of last compile
         self._programs: dict[tuple, Any] = {}
 
     # -- graph construction ------------------------------------------------
@@ -180,7 +181,9 @@ class LazyBackend(TensorBackend):
 
         from ..memory import telemetry
 
-        policy = current_session().compiler
+        sess = current_session()
+        policy = sess.compiler
+        analysis = sess.analysis
         graph, sources = _graph.trace(roots)
         self.ops_fused += sum(1 for uid in graph.order
                               if graph.nodes[uid].op in _ELEMENTWISE)
@@ -190,12 +193,14 @@ class LazyBackend(TensorBackend):
         if policy.cache_programs:
             sig = graph.signature()
             if sig is not None:
-                key = (sig, policy)
+                # analysis level is part of the key: a program cached
+                # with checks off must not satisfy a strict session
+                key = (sig, policy, analysis)
                 exe = self._programs.get(key)
         if exe is not None:
             self.program_cache_hits += 1
         else:
-            exe = _api.compile_graph(graph, policy)
+            exe = _api.compile_graph(graph, policy, analysis=analysis)
             self.kernels_generated += exe.n_kernels
             if key is not None:
                 if len(self._programs) >= 256:     # bounded, FIFO eviction
@@ -203,6 +208,7 @@ class LazyBackend(TensorBackend):
                 self._programs[key] = exe
         self.last_compile_report = _api.describe_report(exe.report, exe)
         self.last_compile_policy = policy
+        self.last_analysis = exe.diagnostics
 
         env = {cid: sources[cid].value for cid in exe.inputs}
         env = exe.run(env)

@@ -11,15 +11,15 @@ kernel overrides, precision policy, and memory manager.
         print(s.describe())       # serializable provenance snapshot
 """
 
-from .policies import (CompilerPolicy, KernelOverrides, PrecisionPolicy,
-                       ServingPolicy, resolve_dtype)
+from .policies import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
+                       PrecisionPolicy, ServingPolicy, resolve_dtype)
 from .session import Session
 from .stack import (current_session, default_session, mutate_current,
                     pop_session, push_session, session)
 
 __all__ = [
     "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
-    "CompilerPolicy", "resolve_dtype",
+    "CompilerPolicy", "AnalysisPolicy", "resolve_dtype",
     "session", "current_session", "default_session",
     "push_session", "pop_session", "mutate_current",
 ]

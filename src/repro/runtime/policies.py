@@ -178,6 +178,72 @@ class CompilerPolicy:
                 "cache_programs": self.cache_programs}
 
 
+@dataclass(frozen=True)
+class AnalysisPolicy:
+    """Static-analysis level carried by a :class:`Session`.
+
+    The ``repro.analysis`` suite runs over every compiled graph — at
+    trace time in ``repro.compile`` and on every lazy-backend
+    materialization — without executing anything.  This policy selects
+    how much runs and how findings are enforced:
+
+    level:
+        ``"off"``     — no analysis (maximum-throughput escape hatch);
+        ``"default"`` — structural IR verification, closed-form
+                        shape/dtype re-derivation, cluster/liveness +
+                        VMEM-budget checks, numerics lint; ERROR-severity
+                        findings raise :class:`~repro.analysis.AnalysisError`;
+        ``"strict"``  — additionally verifies the IR *between passes*
+                        (``PassManager`` verify mode), re-derives shapes
+                        through ``jax.eval_shape`` for ops without
+                        closed-form rules, audits the lowered step
+                        schedule and memory plan, and promotes WARNING
+                        findings (e.g. ``numerics.bf16-accum``) to fatal.
+    vmem_limit_bytes:
+        per-cluster VMEM budget the liveness analysis estimates peak
+        residency against (default 16 MiB — the TPU core budget the
+        hand-written kernels are tiled for).
+    audit_serving:
+        when true (and ``level`` is not ``"off"``), the serving engine
+        audits its paged KV cache block tables after every release; at
+        ``"strict"`` the audit runs regardless.
+    """
+
+    level: str = "default"
+    vmem_limit_bytes: int = 16 * 1024 * 1024
+    audit_serving: bool = False
+
+    _LEVELS = ("off", "default", "strict")
+
+    def __post_init__(self) -> None:
+        if self.level not in self._LEVELS:
+            raise ValueError(f"unknown analysis level {self.level!r}; "
+                             f"known: {self._LEVELS}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.level != "off"
+
+    @property
+    def strict(self) -> bool:
+        return self.level == "strict"
+
+    @property
+    def error_threshold(self) -> Any:
+        """Severity at/above which findings are fatal (strict: WARNING)."""
+        from repro.analysis.diagnostics import Severity
+
+        return Severity.WARNING if self.strict else Severity.ERROR
+
+    def replace(self, **kw: Any) -> "AnalysisPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> dict:
+        return {"level": self.level,
+                "vmem_limit_bytes": self.vmem_limit_bytes,
+                "audit_serving": self.audit_serving}
+
+
 _DTYPE_ALIASES = {
     "f32": "float32", "fp32": "float32", "float32": "float32",
     "f16": "float16", "fp16": "float16", "float16": "float16",

@@ -17,8 +17,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Any
 
-from .policies import (CompilerPolicy, KernelOverrides, PrecisionPolicy,
-                       ServingPolicy)
+from .policies import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
+                       PrecisionPolicy, ServingPolicy)
 
 # Default mesh-axis candidates for the activation batch dimension; matches
 # the historical sharding/context.py default.
@@ -60,6 +60,7 @@ class Session:
     precision: PrecisionPolicy = field(default_factory=PrecisionPolicy)
     serving: ServingPolicy = field(default_factory=ServingPolicy)
     compiler: CompilerPolicy = field(default_factory=CompilerPolicy)
+    analysis: AnalysisPolicy = field(default_factory=AnalysisPolicy)
     memory: Any = None
     tag: str = ""
 
@@ -69,7 +70,8 @@ class Session:
         for name, cls in (("kernels", KernelOverrides),
                           ("precision", PrecisionPolicy),
                           ("serving", ServingPolicy),
-                          ("compiler", CompilerPolicy)):
+                          ("compiler", CompilerPolicy),
+                          ("analysis", AnalysisPolicy)):
             val = getattr(self, name)
             if isinstance(val, dict):
                 object.__setattr__(self, name, cls(**val))
@@ -78,7 +80,8 @@ class Session:
     def replace(self, **overrides) -> "Session":
         """A derived session; nested fields accept dicts of overrides:
         ``s.replace(kernels={"matmul": fn})`` keeps the other kernels."""
-        for name in ("kernels", "precision", "serving", "compiler"):
+        for name in ("kernels", "precision", "serving", "compiler",
+                     "analysis"):
             val = overrides.get(name)
             if isinstance(val, dict):
                 overrides[name] = getattr(self, name).replace(**val)
@@ -146,6 +149,7 @@ class Session:
             "precision": self.precision.describe(),
             "serving": self.serving.describe(),
             "compiler": compiler,
+            "analysis": self.analysis.describe(),
             "memory": memory,
             "tag": self.tag,
         }

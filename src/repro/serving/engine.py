@@ -201,6 +201,7 @@ class ServeEngine:
                     # pool dry: roll back any partial allocation and wait
                     # for active slots to finish (or get evicted later)
                     self.kv.release(slot)
+                    self._audit_kv()
                     self.scheduler.requeue(req)
                     break
             req.admit_seq = self._admit_counter
@@ -255,12 +256,27 @@ class ServeEngine:
                                          bt)
             self.prefill_calls += 1
 
+    # -- static audit --------------------------------------------------------
+    def _audit_kv(self) -> None:
+        """Audit the paged block tables after a release when the pinned
+        session's :class:`~repro.runtime.AnalysisPolicy` asks for it
+        (``audit_serving=True``, or always at ``"strict"``).  A leak,
+        double-free, or trash-block violation raises
+        :class:`~repro.analysis.AnalysisError` at the release that caused
+        it instead of surfacing as cross-request corruption later."""
+        pol = self.session.analysis
+        if not pol.enabled or not (pol.strict or pol.audit_serving):
+            return
+        report = self.kv.audit()
+        report.raise_if_errors(context="paged KV cache audit")
+
     # -- preemption ----------------------------------------------------------
     def _preempt(self, slot: int) -> None:
         req = self.active.pop(slot)
         req.preemptions += 1
         self.preemptions += 1
         self.kv.release(slot)
+        self._audit_kv()
         self.scheduler.requeue(req)
 
     def _ensure_capacity(self) -> None:
@@ -314,6 +330,7 @@ class ServeEngine:
                 del self.active[slot]
                 if self.paged:
                     self.kv.release(slot)
+                    self._audit_kv()
         self.steps += 1
         return finished
 

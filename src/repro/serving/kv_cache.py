@@ -158,6 +158,24 @@ class PagedKVCache:
             self.manager.unlock(ptr)
         self.table[slot] = 0
 
+    # -- static audit --------------------------------------------------------
+    def snapshot(self):
+        """Immutable :class:`repro.analysis.CacheSnapshot` of the block
+        table, held-block map, and allocator live set — the input the
+        static serving checker reasons over."""
+        from repro.analysis.serving import snapshot_cache
+
+        return snapshot_cache(self)
+
+    def audit(self):
+        """Run :func:`repro.analysis.check_paged_cache` over the current
+        state; returns the :class:`~repro.analysis.DiagnosticReport`
+        (leaks, double-frees, double-maps, trash-block violations,
+        table/held divergence)."""
+        from repro.analysis.serving import check_paged_cache
+
+        return check_paged_cache(self.snapshot(), where="PagedKVCache")
+
     # -- device views --------------------------------------------------------
     def device_table(self) -> BlockTable:
         return BlockTable(jnp.asarray(self.table), self.block_size)

@@ -1,0 +1,68 @@
+"""The pre-Session entry points must warn and delegate, not fork state.
+
+``core/tensor/dispatch.py`` (``set_backend`` / ``use_backend``) and
+``sharding/context.py`` (``active_mesh``) survive as deprecated shims over
+the unified Session stack.  These tests pin both halves of that contract:
+each shim emits DeprecationWarning, and its effect is visible through
+``repro.current_session()`` — the shims ride the same stack, they do not
+keep a parallel thread-local alive.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.core.tensor.dispatch import (current_backend, get_backend,
+                                        set_backend, use_backend)
+from repro.runtime import stack as _rt
+from repro.sharding.context import active_mesh, get_active_mesh
+
+
+def test_use_backend_warns_and_rides_session_stack():
+    depth = len(_rt._STACK.stack)
+    before = repro.current_session()
+    with pytest.warns(DeprecationWarning, match="use_backend"):
+        with use_backend("jnp") as b:
+            assert b is get_backend("jnp")
+            assert current_backend() is b
+            assert repro.current_session().backend_instance() is b
+            assert len(_rt._STACK.stack) == depth + 1
+    assert repro.current_session() is before
+    assert len(_rt._STACK.stack) == depth
+
+
+def test_set_backend_warns_and_mutates_current_scope():
+    with repro.session():                      # scope to contain the edit
+        with pytest.warns(DeprecationWarning, match="set_backend"):
+            set_backend("lazy")
+        assert repro.current_session().backend == "lazy"
+        assert current_backend() is get_backend("lazy")
+    assert repro.current_session().backend != "lazy"
+
+
+def test_active_mesh_warns_and_installs_session_mesh():
+    devs = np.array(jax.devices()[:1])
+    mesh = jax.sharding.Mesh(devs, ("data",))
+    assert get_active_mesh() is None
+    with pytest.warns(DeprecationWarning, match="active_mesh"):
+        with active_mesh(mesh, batch_axes=("data",)) as m:
+            assert m is mesh
+            sess = repro.current_session()
+            assert sess.mesh is mesh
+            assert sess.batch_axes == ("data",)
+            assert get_active_mesh() is mesh
+    assert get_active_mesh() is None
+
+
+def test_shims_compose_with_modern_sessions():
+    """A deprecated shim nested inside repro.session() must pop cleanly
+    and leave the outer session's fields intact."""
+    with repro.session(tag="outer") as outer:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            with use_backend("jnp"):
+                assert repro.current_session().tag == "outer"
+        assert repro.current_session() is outer
