@@ -5,7 +5,11 @@ Three checkers:
 * :func:`check_clusters` — audits the fusion partition *before* lowering:
   membership integrity, external-input/output edge sets recomputed from
   scratch (a member consumed outside the cluster but missing from
-  ``Cluster.outputs`` would be silently dropped by lowering), atomicity
+  ``Cluster.outputs`` would be silently dropped by lowering), **kind
+  consistency** (``cluster.kind-mismatch`` — the declared ``Cluster.kind``
+  must agree with the member ops, since lowering dispatches the kernel
+  strategy on it: an attention cluster mislabeled elementwise would replay
+  two matmuls through the whole-array body), atomicity
   (the condensed graph must be acyclic — Kahn's algorithm is re-run here,
   so an illegal partition is a diagnostic instead of a lowering crash),
   and a per-cluster **peak-live-bytes estimate against the VMEM budget**:
@@ -67,9 +71,39 @@ def _cluster_peak_bytes(graph: "Graph", node_ids: tuple[int, ...],
     return base + peak
 
 
+def _kind_violation(kind: str, n_matmul: int, n_reduce: int,
+                    meta: dict) -> str | None:
+    """Why ``kind`` disagrees with the member ops; None when consistent."""
+    if kind == "elementwise":
+        if n_matmul or n_reduce:
+            return (f"contains {n_matmul} matmul / {n_reduce} reduction "
+                    "member(s) — the whole-array elementwise body would "
+                    "replay them per-element")
+    elif kind == "reduction":
+        if n_matmul:
+            return f"contains {n_matmul} matmul member(s)"
+        if not n_reduce:
+            return "contains no reduction member"
+    elif kind == "epilogue":
+        if n_matmul != 1:
+            return (f"epilogue lowering fuses exactly one matmul, cluster "
+                    f"has {n_matmul}")
+    elif kind == "attention":
+        if n_matmul != 2:
+            return (f"attention template needs the QK^T and PV matmuls, "
+                    f"cluster has {n_matmul}")
+        if meta.get("mode") not in ("softmax", "sigmoid"):
+            return f"meta mode {meta.get('mode')!r} is not a template mode"
+    else:
+        return f"unknown cluster kind {kind!r}"
+    return None
+
+
 def check_clusters(graph: "Graph", policy: "AnalysisPolicy | None" = None,
                    where: str | None = None) -> DiagnosticReport:
-    """Verify the fusion partition and per-cluster VMEM budgets."""
+    """Verify the fusion partition, cluster-kind consistency, and
+    per-cluster VMEM budgets."""
+    from repro.compiler.graph import REDUCTION_OPS
     from repro.runtime.policies import AnalysisPolicy
 
     policy = policy or AnalysisPolicy()
@@ -106,6 +140,17 @@ def check_clusters(graph: "Graph", policy: "AnalysisPolicy | None" = None,
                 report.add("cluster.output-foreign", Severity.ERROR,
                            f"output %{uid} is not a cluster member",
                            node=uid, **prov)
+        # kind consistency: lowering dispatches the kernel strategy on
+        # Cluster.kind, so a mislabel silently picks the wrong lowering
+        member_ops = [graph.nodes[u].op for u in cl.node_ids
+                      if u in graph.nodes]
+        why = _kind_violation(
+            cl.kind, sum(op == "matmul" for op in member_ops),
+            sum(op in REDUCTION_OPS for op in member_ops), cl.meta)
+        if why is not None:
+            report.add("cluster.kind-mismatch", Severity.ERROR,
+                       f"cluster declared kind={cl.kind!r} but {why}",
+                       **prov)
         # recompute the escape set: members consumed outside, or program
         # outputs, must be materialized by the kernel
         for uid in cl.node_ids:

@@ -214,6 +214,40 @@ def _lowered(name: str, lowering: str = "eager",
                  plan=memory_plan(snap, g))
 
 
+# -- matcher clusters / fused-kernel contracts --------------------------------
+
+
+def _attention_kind_mismatch() -> DiagnosticReport:
+    from .liveness import check_clusters
+
+    # the attention matcher claimed softmax(QK^T)V; a buggy rewrite
+    # relabels the cluster elementwise — lowering would replay both
+    # matmuls through the whole-array body
+    g = _graph("softmax_attention", pipeline=("attention", "fuse"))
+    attn = [cl for cl in g.clusters if cl.kind == "attention"]
+    assert attn, "attention matcher claimed nothing on softmax_attention"
+    attn[0].kind = "elementwise"
+    return check_clusters(g, _policy())
+
+
+def _epilogue_partial_row() -> DiagnosticReport:
+    from .tiles import check_kernel_call
+
+    # a reducing epilogue (softmax/rmsnorm denominator) launched with a
+    # partial-row n tile: each program reduces over bn=128 of n=256
+    return check_kernel_call("matmul_epilogue", m=256, k=256, n=256,
+                             bm=128, bn=128, bk=128, reduce=True)
+
+
+def _attention_template_oob() -> DiagnosticReport:
+    from .tiles import check_kernel_call
+
+    # the template never masks: sq=192 with bq=128 leaves a 64-row
+    # overhang the final program reads out of bounds
+    return check_kernel_call("attention_template", sq=192, sk=256, d=64,
+                             bq=128, bk=128)
+
+
 # -- kernel tile contracts ----------------------------------------------------
 
 
@@ -342,6 +376,15 @@ MUTATIONS: tuple[Mutation, ...] = (
     Mutation("plan_double_free", "plan.double-free",
              "the memory plan frees the same allocation twice",
              _plan_double_free),
+    Mutation("attention_kind_mismatch", "cluster.kind-mismatch",
+             "a matched attention cluster relabeled elementwise",
+             _attention_kind_mismatch),
+    Mutation("epilogue_partial_row", "tile.epilogue-row",
+             "a reducing matmul epilogue tiled with partial rows",
+             _epilogue_partial_row),
+    Mutation("attention_template_oob", "tile.oob",
+             "attention template launched with sq not divisible by bq",
+             _attention_template_oob),
     Mutation("tile_oob", "tile.oob",
              "matmul launched with k not divisible by bk (unmasked)",
              _tile_oob),

@@ -135,11 +135,77 @@ def _rms_norm(*, n: int, d: int, bn: int = 256,
                         vmem_bytes=vmem, vmem_limit=vmem_limit)
 
 
+def _attention_template(*, sq: int, sk: int, d: int, dv: int | None = None,
+                        bq: int = 128, bk: int = 128,
+                        dtype: Any = jnp.float32,
+                        vmem_limit: int | None = None) -> DiagnosticReport:
+    """The parameterized attention template the attention matcher lowers
+    to (``kernels/flash_attention.attention_template``): like
+    ``flash_attention`` but q and kv sequence lengths may differ and the
+    template never masks — both grids must divide exactly."""
+    dv = d if dv is None else dv
+    bq, bk = min(bq, sq), min(bk, sk)
+    itemsize = jnp.dtype(dtype).itemsize
+    # q tile + k tile + v tile + scores + bias tile + fp32 (m, l, acc)
+    vmem = (bq * d + bk * d + bk * dv) * itemsize \
+        + (2 * bq * bk + bq * (dv + 2)) * 4
+    return check_tiling(
+        "attention_template",
+        [TileDim("sq/bq", sq, bq), TileDim("sk/bk", sk, bk)],
+        vmem_bytes=vmem, vmem_limit=vmem_limit)
+
+
+def _matmul_epilogue(*, m: int, k: int, n: int, bm: int = 128,
+                     bn: int = 128, bk: int = 128, reduce: bool = False,
+                     n_extra: int = 0, dtype: Any = jnp.float32,
+                     vmem_limit: int | None = None) -> DiagnosticReport:
+    """The fused matmul-epilogue kernel (``kernels/matmul.matmul_epilogue``):
+    matmul tiling rules, plus — when the epilogue body contains a row
+    reduction (``reduce=True``) — the output tile must hold complete rows
+    (``bn == n``), or each program reduces over a partial row and the
+    softmax/rmsnorm denominator is silently wrong."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    itemsize = jnp.dtype(dtype).itemsize
+    vmem = (bm * bk + bk * bn + (1 + n_extra) * bm * bn) * itemsize \
+        + bm * bn * 4
+    report = check_tiling(
+        "matmul_epilogue",
+        [TileDim("m", m, bm), TileDim("n", n, bn), TileDim("k", k, bk)],
+        vmem_bytes=vmem, vmem_limit=vmem_limit)
+    if reduce and bn != n:
+        report.add(
+            "tile.epilogue-row", Severity.ERROR,
+            f"epilogue body reduces over rows but the n tile is {bn} < "
+            f"{n} — each program sees a partial row, so the reduction "
+            "result is wrong (plan_epilogue must force bn == n)",
+            where=f"matmul_epilogue(n={n}, bn={bn})")
+    return report
+
+
+def _reduction_cluster(*, shape: tuple[int, ...], n_operands: int = 2,
+                       dtype: Any = jnp.float32,
+                       vmem_limit: int | None = None) -> DiagnosticReport:
+    """A generated reduction-cluster kernel: whole-array blocks (the body
+    replays the subgraph on full operands), so divisibility is trivial —
+    the contract is that the whole working set is VMEM-resident."""
+    itemsize = jnp.dtype(dtype).itemsize
+    size = 1
+    for s in shape:
+        size *= s
+    dims = [TileDim(f"axis{i}", s, s) for i, s in enumerate(shape)]
+    return check_tiling("reduction_cluster", dims,
+                        vmem_bytes=n_operands * size * itemsize,
+                        vmem_limit=vmem_limit)
+
+
 KERNEL_CONTRACTS: dict[str, Callable[..., DiagnosticReport]] = {
     "flash_attention": _flash_attention,
     "flash_decode": _flash_decode,
     "matmul": _matmul,
     "rms_norm": _rms_norm,
+    "attention_template": _attention_template,
+    "matmul_epilogue": _matmul_epilogue,
+    "reduction_cluster": _reduction_cluster,
 }
 
 
@@ -166,11 +232,15 @@ def check_cluster_specs(graph: "Graph",
                         where: str | None = None) -> DiagnosticReport:
     """Audit the specs the cluster lowering would generate.
 
-    A generated kernel uses one whole-array BlockSpec per operand, so the
-    only OOB risk is shape disagreement across members (the body computes
-    on the common shape; a larger output would read garbage).  On TPU the
-    tiling additionally wants (…, 8k, 128k) fp32/bf16 operands — anything
-    else must take the jit fallback, so here it is only an INFO note.
+    ``elementwise``/``reduction`` clusters use one whole-array BlockSpec
+    per operand, so the only tiling risks are TPU-specific: shape
+    disagreement across members and lane/sublane misalignment both force
+    the jit fallback there (off-TPU the interpreted whole-array body
+    handles any shape mix exactly), so they are INFO provenance notes.
+    ``epilogue``/``attention`` clusters carry their own tiled specs whose
+    contracts the matcher pre-validated (``plan_epilogue`` /
+    ``template_supported``); their launch parameters are covered by the
+    named :data:`KERNEL_CONTRACTS` instead.
     """
     from repro.runtime.policies import AnalysisPolicy
 
@@ -179,19 +249,23 @@ def check_cluster_specs(graph: "Graph",
     if not policy.enabled:
         return report
     for cl in graph.clusters:
+        if cl.kind in ("epilogue", "attention"):
+            continue
+        if not on_tpu:
+            continue
         nodes = [graph.nodes[u] for u in cl.node_ids if u in graph.nodes]
         ins = [graph.nodes[u] for u in cl.inputs if u in graph.nodes]
         shapes = {tuple(n.shape) for n in nodes} | {tuple(n.shape)
                                                     for n in ins}
         if len(shapes) > 1:
-            # lowering falls back to jit for these; only a hand-forced
-            # pallas path would be OOB, so record it as INFO provenance
+            # TPU lowering falls back to jit for these; only a
+            # hand-forced pallas path would be OOB, so INFO provenance
             report.add("tile.shape-divergent", Severity.INFO,
                        f"cluster spans shapes {sorted(shapes)}; pallas "
-                       "path unavailable (jit fallback)", cluster=cl.cid,
-                       where=where)
+                       "path unavailable on TPU (jit fallback)",
+                       cluster=cl.cid, where=where)
             continue
-        if not on_tpu or not shapes:
+        if not shapes:
             continue
         (shape,) = shapes
         if len(shape) < 2 or shape[-1] % _LANE or shape[-2] % _SUBLANE:

@@ -4,9 +4,12 @@ The lazy backend's pending-op web, promoted to a first-class compiler
 (paper §4.1.1's ArrayFire-JIT story as an open subsystem):
 
     trace()        LazyTensor stream  →  explicit SSA-style Graph
-    PassManager    cse / fold / dce / fuse, each reporting node deltas
-    lower()        fused clusters     →  generated Pallas kernels
-                   (interpret off-TPU, per-cluster jit fallback)
+    PassManager    cse / fold / dce / attention / epilogue / fuse,
+                   each reporting node deltas
+    lower()        clusters by kind   →  generated Pallas kernels
+                   (elementwise/reduction bodies, fused-epilogue matmul,
+                   templated flash attention; interpret off-TPU,
+                   per-cluster jit fallback)
     compile(fn)    the user-facing decorator over the whole pipeline
 
 ``repro.session(backend="lazy", compiler=CompilerPolicy(...))`` selects
@@ -18,12 +21,14 @@ and fails on IR invariant violations.
 from repro.runtime import CompilerPolicy
 
 from .api import CompiledFunction, compile, compile_graph, optimize
-from .graph import ELEMENTWISE_OPS, Cluster, Graph, Node, trace
+from .graph import (CLUSTER_KINDS, ELEMENTWISE_OPS, REDUCTION_OPS, Cluster,
+                    Graph, Node, trace)
 from .lowering import Executable, lower
 from .passes import PASS_REGISTRY, PassManager, PassStats
 
 __all__ = [
     "CompilerPolicy", "CompiledFunction", "compile", "compile_graph",
     "optimize", "Graph", "Node", "Cluster", "trace", "ELEMENTWISE_OPS",
+    "REDUCTION_OPS", "CLUSTER_KINDS",
     "Executable", "lower", "PassManager", "PassStats", "PASS_REGISTRY",
 ]

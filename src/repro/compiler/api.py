@@ -82,8 +82,10 @@ def describe_report(report: list[PassStats], exe: Executable | None = None
     """JSON-able pipeline provenance (what ``Session.describe()`` embeds)."""
     out: dict[str, Any] = {"passes": [s.describe() for s in report]}
     if exe is not None:
-        out["dispatches"] = exe.n_dispatches
-        out["pallas_kernels"] = exe.n_kernels
+        desc = exe.describe()
+        out["dispatches"] = desc["dispatches"]
+        out["pallas_kernels"] = desc["pallas_kernels"]
+        out["clusters"] = desc["clusters"]
     return out
 
 

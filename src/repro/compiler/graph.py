@@ -36,8 +36,21 @@ from repro.core.tensor.lazy_backend import _ELEMENTWISE
 #: the fusable set (the lazy backend's table is the source of truth).
 ELEMENTWISE_OPS = frozenset(_ELEMENTWISE)
 
+#: ops that collapse one or more axes; ``attrs`` is ``(axis, keepdims)``.
+REDUCTION_OPS = frozenset({"sum", "max", "min", "prod"})
+
+#: everything the fusion pass may place inside a generated cluster:
+#: elementwise ops, trailing reductions (and the elementwise epilogue that
+#: follows them — softmax denominators, mean chains), plus the two
+#: shape-transparent ops those compositions thread values through.
+FUSABLE_OPS = (ELEMENTWISE_OPS | REDUCTION_OPS
+               | frozenset({"stop_gradient", "broadcast_to"}))
+
 #: ops whose value depends on state we must not deduplicate or precompute.
 IMPURE_OPS = frozenset({"random_uniform", "random_normal"})
+
+#: the cluster kinds lowering knows how to dispatch on.
+CLUSTER_KINDS = ("elementwise", "reduction", "epilogue", "attention")
 
 
 @dataclass
@@ -75,13 +88,24 @@ class Node:
 
 @dataclass
 class Cluster:
-    """A fusable region found by the fusion pass: executed atomically as
-    one generated kernel."""
+    """A fusable region found by a fusion/matcher pass: executed atomically
+    as one generated kernel.
+
+    ``kind`` selects the lowering strategy (see :data:`CLUSTER_KINDS`):
+    ``elementwise``/``reduction`` regions get a synthesized whole-body
+    kernel, ``epilogue`` regions fold into the tiled matmul kernel, and
+    ``attention`` regions lower to the parameterized flash-attention
+    template.  ``meta`` carries the matcher's role assignments (which
+    external input is q/k/v, the static scale, the softmax/sigmoid mode);
+    it is empty for plain fusion clusters.
+    """
 
     cid: int
     node_ids: tuple[int, ...]     # members, topo order
     inputs: tuple[int, ...]       # external producers, first-use order
     outputs: tuple[int, ...]      # members consumed outside (or graph outputs)
+    kind: str = "elementwise"
+    meta: dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass
@@ -171,7 +195,7 @@ class Graph:
         """Text format, one SSA binding per line::
 
             graph(%0: f32[8,8]) {
-              %1 = add(%0, %0) : f32[8,8]        # cluster 0
+              %1 = add(%0, %0) : f32[8,8]        # cluster 0 (elementwise)
               ...
               return %1
             }
@@ -189,7 +213,9 @@ class Graph:
             else:
                 head = f"  %{uid} = {n.op}({args}) : {n.type_str()}"
             if n.cluster is not None:
-                head = f"{head:<52}# cluster {n.cluster}"
+                kind = (self.clusters[n.cluster].kind
+                        if n.cluster < len(self.clusters) else "?")
+                head = f"{head:<52}# cluster {n.cluster} ({kind})"
             lines.append(head)
         rets = ", ".join(f"%{self.resolve(o)}" for o in self.outputs)
         lines.append(f"  return {rets}")

@@ -47,6 +47,7 @@ class ClusterStep:
     outputs: tuple[int, ...]
     kind: str                     # "pallas" | "jit" | "eager"
     n_ops: int = 0
+    cluster_kind: str = "elementwise"   # Cluster.kind provenance
 
 
 @dataclass
@@ -98,6 +99,10 @@ class Executable:
                "pallas_kernels": self.n_kernels,
                "steps": [s.kind if isinstance(s, ClusterStep) else "op"
                          for s in self.steps],
+               "clusters": [{"kind": s.cluster_kind, "lowering": s.kind,
+                             "n_ops": s.n_ops}
+                            for s in self.steps
+                            if isinstance(s, ClusterStep)],
                "passes": [s.describe() for s in self.report]}
         if self.diagnostics is not None:
             out["diagnostics"] = self.diagnostics.counts()
@@ -228,9 +233,27 @@ def lower(graph: Graph, policy: Any, report: list[PassStats] | None = None,
         if policy.lowering == "eager":
             fn = cluster_kernels.make_body(members, cl.inputs, cl.outputs)
             kind = "eager"
-        elif (policy.lowering == "auto"
-                and cluster_kernels.pallas_supported(
-                    members, ins, on_tpu=not interpret)):
+        elif policy.lowering != "auto":
+            fn = cluster_kernels.build_jit_cluster(members, ins, outs)
+            kind = "jit"
+        elif cl.kind == "attention":
+            # templated flash-attention; per-cluster jit when the tile
+            # contract doesn't hold
+            if cluster_kernels.attention_supported(
+                    ins, cl.meta, on_tpu=not interpret):
+                fn = cluster_kernels.build_attention_cluster(
+                    ins, outs, cl.meta, interpret=interpret)
+                kind = "pallas"
+            else:
+                fn = cluster_kernels.build_jit_cluster(members, ins, outs)
+                kind = "jit"
+        elif cl.kind == "epilogue":
+            # the matcher only claims cones whose tiling plan validated
+            fn = cluster_kernels.build_epilogue_cluster(
+                members, ins, outs, cl.meta, interpret=interpret)
+            kind = "pallas"
+        elif cluster_kernels.pallas_supported(
+                members, ins, on_tpu=not interpret):
             fn = cluster_kernels.build_cluster_kernel(
                 members, ins, outs, interpret=interpret)
             kind = "pallas"
@@ -238,7 +261,8 @@ def lower(graph: Graph, policy: Any, report: list[PassStats] | None = None,
             fn = cluster_kernels.build_jit_cluster(members, ins, outs)
             kind = "jit"
         steps.append(ClusterStep(fn, cl.inputs, cl.outputs, kind,
-                                 n_ops=len(cl.node_ids)))
+                                 n_ops=len(cl.node_ids),
+                                 cluster_kind=cl.kind))
     allocs, frees = plan if plan is not None else memory_plan(
         snapshot_logical(graph), graph)
     return Executable(steps, consts, graph.inputs, graph.outputs,

@@ -6,19 +6,36 @@ and ``benchmarks/bench_fusion.py`` charts per-pass reductions.
 
 Built-in passes (registered in :data:`PASS_REGISTRY`):
 
-``cse``   common-subexpression elimination — merges pure nodes with equal
-          ``(op, attrs, inputs)``; merged uids land in ``graph.alias`` so
-          live ``LazyTensor`` handles still resolve to the surviving value.
-``fold``  constant folding — precomputes pure nodes whose inputs are all
-          compile-time constants (creation ops like ``full``/``iota``
-          qualify vacuously), bounded by ``fold_size_limit`` elements.
-``dce``   dead-code elimination — drops nodes unreachable from the
-          outputs (CSE leftovers, dead branches of traced functions).
-          ``input`` nodes are kept: they are the program's calling
-          convention.
-``fuse``  elementwise-cluster fusion — partitions the graph into fusable
-          regions (``graph.clusters``) lowered to one generated kernel
-          each; cycle-safety is checked with ancestor/descendant bitsets.
+``cse``       common-subexpression elimination — merges pure nodes with
+              equal ``(op, attrs, inputs)``; merged uids land in
+              ``graph.alias`` so live ``LazyTensor`` handles still resolve
+              to the surviving value.
+``fold``      constant folding — precomputes pure nodes whose inputs are
+              all compile-time constants (creation ops like ``full``/
+              ``iota`` qualify vacuously), bounded by ``fold_size_limit``.
+``dce``       dead-code elimination — drops nodes unreachable from the
+              outputs.  ``input`` nodes are kept: they are the program's
+              calling convention.
+``attention`` pattern matcher — recognizes ``act(scale·(q@kᵀ) + bias) @ v``
+              subgraphs written in plain ops (softmax or sigmoid
+              activation; optional uniform-const scale; optional additive
+              mask/ALiBi bias) and claims them as ``attention`` clusters,
+              lowered to the parameterized flash-attention template with a
+              per-cluster ``jax.jit`` fallback when tile contracts fail.
+``epilogue``  matmul epilogue fusion — folds elementwise / last-axis-
+              reduction consumers of a 2-D matmul (bias add, activations,
+              rmsnorm) into an ``epilogue`` cluster lowered as one fused
+              matmul kernel.  Claims a cone only when the fused kernel's
+              tiling contract holds; otherwise leaves the region to
+              ``fuse``.
+``fuse``      cluster fusion — partitions the *unclaimed* remainder into
+              elementwise/reduction regions (``graph.clusters``) lowered
+              to one generated kernel each; cycle-safety is checked with
+              ancestor/descendant bitsets.
+
+Matcher passes run before ``fuse``: they claim subgraphs by setting
+``node.cluster``, and ``fuse`` only partitions nodes still unclaimed —
+matcher clusters are preserved, never dissolved or merged.
 """
 
 from __future__ import annotations
@@ -26,7 +43,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any
 
-from .graph import Cluster, ELEMENTWISE_OPS, Graph, IMPURE_OPS
+import numpy as np
+
+from .graph import (Cluster, ELEMENTWISE_OPS, FUSABLE_OPS, Graph,
+                    IMPURE_OPS, Node, REDUCTION_OPS)
 
 
 @dataclass
@@ -115,6 +135,7 @@ class ConstantFoldPass(Pass):
             ins = [graph.nodes[d] for d in node.inputs]
             if not all(n.op == "const" and n.attrs is not None for n in ins):
                 continue
+            assert node.fn is not None
             node.value = node.fn(*[n.value for n in ins])
             node.attrs = (node.op, node.attrs,
                           tuple(n.attrs for n in ins))
@@ -148,15 +169,521 @@ class DCEPass(Pass):
         return {"removed": removed}
 
 
-class FusionPass(Pass):
-    """Partition the graph into elementwise clusters.
+# -- matcher helpers ---------------------------------------------------------
 
-    Greedy over topo order: each elementwise node tries to join the
-    union of its producers' clusters.  A merge is legal iff no path
-    leaves the merged region and re-enters it (the region must execute
-    atomically); checked with precomputed ancestor/descendant bitsets —
-    ``bad = desc(region) & anc(region) & ~region``.  Clusters smaller
-    than ``min_cluster_size`` are dissolved back to single dispatches.
+
+def _uniform_scalar(node: Node) -> float | None:
+    """The scalar a ``full`` / uniform ``const`` node carries, or None."""
+    if node.op == "full" and node.attrs and len(node.attrs) >= 2:
+        try:
+            return float(node.attrs[1])
+        except (TypeError, ValueError):
+            return None
+    if node.op == "const" and node.value is not None:
+        v = np.asarray(node.value)
+        if v.size == 0:
+            return None
+        flat = v.reshape(-1)
+        if not bool((flat == flat[0]).all()):
+            return None
+        try:
+            return float(flat[0])
+        except (TypeError, ValueError):
+            return None
+    return None
+
+
+def _last_axis_reduction(node: Node) -> bool:
+    """True for a keepdims reduction over the last axis."""
+    if node.op not in REDUCTION_OPS or not node.attrs:
+        return False
+    if len(node.attrs) != 2:
+        return False
+    axis, keepdims = node.attrs
+    rank = len(node.shape)
+    return (bool(keepdims) and axis is not None
+            and isinstance(axis, int) and axis % max(rank, 1) == rank - 1)
+
+
+def _cluster_kind_counts(graph: Graph) -> dict[str, int]:
+    kinds: dict[str, int] = {}
+    for cl in graph.clusters:
+        kinds[cl.kind] = kinds.get(cl.kind, 0) + 1
+    return kinds
+
+
+def _claim_cluster(graph: Graph, members: set[int], outputs: tuple[int, ...],
+                   kind: str, meta: dict[str, Any]) -> Cluster:
+    """Append a matcher cluster: members in topo order, external inputs
+    in first-use order, ``node.cluster`` stamped."""
+    cid = len(graph.clusters)
+    node_ids = tuple(u for u in graph.order if u in members)
+    ext: list[int] = []
+    for u in node_ids:
+        for d in graph.nodes[u].inputs:
+            if d not in members and d not in ext:
+                ext.append(d)
+    for u in node_ids:
+        graph.nodes[u].cluster = cid
+    cl = Cluster(cid, node_ids, tuple(ext), outputs, kind=kind, meta=meta)
+    graph.clusters.append(cl)
+    return cl
+
+
+class AttentionMatchPass(Pass):
+    """Recognize ``act(scale·(q@kᵀ) + bias) @ v`` subgraphs.
+
+    Matched variants (all written in plain ops, see ``ops.softmax`` /
+    ``ops.sigmoid`` for the compositions this walks):
+
+    * softmax attention, with or without the max-subtraction shift;
+    * sigmoid attention (``1 / (1 + exp(-s))`` over the scores);
+    * an optional uniform-constant scale (``mul``/``div``) on the scores;
+    * an optional additive bias — custom masks, ALiBi slopes — applied
+      before or after the scale (the relative ordering is folded into a
+      static ``bias_scale``);
+    * ``q @ transpose(k)`` with the transpose absorbed, or a rhs already
+      laid out ``[..., D, Sk]``.
+
+    A match is claimed only when every interior node is consumed solely
+    inside the pattern (the cluster is a sink-cone, so contracting it can
+    never create a cycle).  The cluster's ``meta`` records the role of
+    each external input (q/k/v/bias), the static scale(s), and the
+    activation mode — everything the template lowering needs.
+    """
+
+    name = "attention"
+
+    #: bound on scale/bias peeling, so a malformed chain cannot loop.
+    _MAX_PEEL = 32
+
+    def run(self, graph: Graph) -> dict[str, Any]:
+        consumers = graph.consumers()
+        out_set = {graph.resolve(o) for o in graph.outputs}
+        matched = 0
+        for uid in list(graph.order):
+            node = graph.nodes[uid]
+            if node.op != "matmul" or node.cluster is not None:
+                continue
+            found = self._match(graph, node, consumers, out_set)
+            if found is None:
+                continue
+            members, meta = found
+            self._absorb_consts(graph, members, meta, consumers, out_set)
+            if any(graph.nodes[u].cluster is not None for u in members):
+                continue
+            _claim_cluster(graph, members, (uid,), "attention", meta)
+            matched += 1
+        return {"matched": matched,
+                "cluster_kinds": _cluster_kind_counts(graph)}
+
+    @staticmethod
+    def _absorb_consts(graph: Graph, members: set[int], meta: dict[str, Any],
+                       consumers: dict[int, list[int]],
+                       out_set: set[int]) -> None:
+        """Pull peeled uniform ``full`` constants into the cluster.
+
+        The template ignores them (their scalar lives in ``meta`` as a
+        static scale), and the jit fallback replays their zero-input
+        ``fn`` inside the body — but left external, a score-shaped
+        constant too large for the folder would keep a full-shape
+        materialization dispatch alive just to feed an ignored operand.
+        """
+        roles = {meta["q"], meta["k"], meta["v"], meta["bias"]}
+        ext = {d for u in members for d in graph.nodes[u].inputs
+               if d not in members}
+        for d in ext:
+            dn = graph.nodes[d]
+            if (dn.op == "full" and dn.cluster is None and d not in roles
+                    and d not in out_set
+                    and all(c in members for c in consumers[d])):
+                members.add(d)
+
+    # -- pattern walk -------------------------------------------------------
+
+    def _match(self, graph: Graph, out_mm: Node,
+               consumers: dict[int, list[int]], out_set: set[int]
+               ) -> tuple[set[int], dict[str, Any]] | None:
+        nodes = graph.nodes
+        if len(out_mm.inputs) != 2:
+            return None
+        p_uid, v_uid = out_mm.inputs
+        p = nodes[p_uid]
+        members: set[int] = {out_mm.uid}
+        meta: dict[str, Any] = {}
+
+        scores_uid = self._match_activation(graph, p, members, meta)
+        if scores_uid is None:
+            return None
+
+        peeled = self._peel_scores(graph, scores_uid, members)
+        if peeled is None:
+            return None
+        qk_uid, scale, bias_uid, bias_scale = peeled
+        members.add(qk_uid)
+        qk = nodes[qk_uid]
+        if len(qk.inputs) != 2:
+            return None
+        q_uid, kt_uid = qk.inputs
+
+        # absorb a trailing last-two-axes transpose of k when it feeds
+        # only this matmul; otherwise the rhs is taken as pre-transposed
+        k_uid, k_layout = kt_uid, "kT"
+        kt = nodes[kt_uid]
+        if (kt.op == "transpose" and kt.cluster is None
+                and kt_uid not in out_set
+                and all(c == qk_uid for c in consumers[kt_uid])
+                and self._is_last_two_swap(kt)):
+            members.add(kt_uid)
+            k_uid, k_layout = kt.inputs[0], "std"
+
+        if not self._shapes_ok(graph, q_uid, k_uid, v_uid, bias_uid,
+                               k_layout, qk, out_mm):
+            return None
+        # role inputs must stay external to the cluster
+        if any(u in members for u in (q_uid, k_uid, v_uid)
+               ) or (bias_uid is not None and bias_uid in members):
+            return None
+        # interior nodes must be consumed only inside the pattern, and the
+        # sink must actually escape (else the region is dead code)
+        for u in members:
+            if u == out_mm.uid:
+                continue
+            if u in out_set or any(c not in members for c in consumers[u]):
+                return None
+        if not (out_mm.uid in out_set
+                or any(c not in members for c in consumers[out_mm.uid])):
+            return None
+
+        meta.update(q=q_uid, k=k_uid, v=v_uid, bias=bias_uid,
+                    scale=scale, bias_scale=bias_scale, k_layout=k_layout)
+        return members, meta
+
+    def _match_activation(self, graph: Graph, p: Node, members: set[int],
+                          meta: dict[str, Any]) -> int | None:
+        """Match softmax/sigmoid over the scores; returns the scores uid."""
+        nodes = graph.nodes
+        if p.op != "div" or len(p.inputs) != 2:
+            return None
+        a_uid, b_uid = p.inputs
+        a, b = nodes[a_uid], nodes[b_uid]
+
+        if a.op == "exp" and b.op == "sum":
+            # softmax: div(exp(t), sum(exp(t), -1, keepdims=True))
+            if b.inputs != (a_uid,) or not _last_axis_reduction(b):
+                return None
+            members |= {p.uid, a_uid, b_uid}
+            t_uid = a.inputs[0]
+            t = nodes[t_uid]
+            shifted = False
+            scores_uid = t_uid
+            if t.op == "sub" and len(t.inputs) == 2:
+                s_uid, r_uid = t.inputs
+                r = nodes[r_uid]
+                chain = [r_uid]
+                if r.op == "stop_gradient" and len(r.inputs) == 1:
+                    chain.append(r.inputs[0])
+                    r = nodes[r.inputs[0]]
+                if (r.op == "max" and _last_axis_reduction(r)
+                        and r.inputs == (s_uid,)):
+                    members |= {t_uid, *chain}
+                    shifted, scores_uid = True, s_uid
+            meta["mode"], meta["shifted"] = "softmax", shifted
+            return scores_uid
+
+        if b.op == "add" and len(b.inputs) == 2 \
+                and _uniform_scalar(a) == 1.0:
+            # sigmoid: div(1, add(1, exp(neg(s)))) — either add order
+            c_uid, g_uid = b.inputs
+            if _uniform_scalar(nodes[c_uid]) != 1.0:
+                c_uid, g_uid = g_uid, c_uid
+            g = nodes[g_uid]
+            if _uniform_scalar(nodes[c_uid]) != 1.0 or g.op != "exp":
+                return None
+            ng = nodes[g.inputs[0]]
+            if ng.op != "neg":
+                return None
+            members |= {p.uid, b.uid, g_uid, ng.uid}
+            meta["mode"], meta["shifted"] = "sigmoid", False
+            return ng.inputs[0]
+        return None
+
+    def _peel_scores(self, graph: Graph, scores_uid: int, members: set[int]
+                     ) -> tuple[int, float, int | None, float] | None:
+        """Walk scores → matmul through const scales and one bias add.
+
+        Returns ``(qk_uid, scale, bias_uid, bias_scale)`` where the
+        matched region computes ``scale·(q@kᵀ) + bias_scale·bias``.
+        """
+        nodes = graph.nodes
+        memo: dict[int, bool] = {}
+
+        def reaches(uid: int, depth: int = 0) -> bool:
+            if uid in memo:
+                return memo[uid]
+            out = False
+            n = nodes[uid]
+            if depth > self._MAX_PEEL:
+                out = False
+            elif n.op == "matmul":
+                out = True
+            elif n.op in ("mul", "div") and len(n.inputs) == 2:
+                x, y = n.inputs
+                if _uniform_scalar(nodes[y]) is not None:
+                    out = reaches(x, depth + 1)
+                elif n.op == "mul" and _uniform_scalar(nodes[x]) is not None:
+                    out = reaches(y, depth + 1)
+            elif n.op == "add" and len(n.inputs) == 2:
+                x, y = n.inputs
+                # exactly one side may continue toward the matmul
+                out = reaches(x, depth + 1) != reaches(y, depth + 1)
+            memo[uid] = out
+            return out
+
+        outer = 1.0
+        bias_uid: int | None = None
+        bias_scale = 1.0
+        cur = scores_uid
+        for _ in range(self._MAX_PEEL):
+            n = nodes[cur]
+            if n.op == "matmul":
+                return cur, outer, bias_uid, bias_scale
+            if n.op in ("mul", "div") and len(n.inputs) == 2:
+                x_uid, y_uid = n.inputs
+                cy = _uniform_scalar(nodes[y_uid])
+                cx = _uniform_scalar(nodes[x_uid])
+                if cy is not None and n.op == "div":
+                    if cy == 0.0 or not reaches(x_uid):
+                        return None
+                    outer /= cy
+                    members.add(cur)
+                    cur = x_uid
+                    continue
+                if cy is not None and reaches(x_uid):
+                    outer *= cy
+                    members.add(cur)
+                    cur = x_uid
+                    continue
+                if n.op == "mul" and cx is not None and reaches(y_uid):
+                    outer *= cx
+                    members.add(cur)
+                    cur = y_uid
+                    continue
+                return None
+            if n.op == "add" and len(n.inputs) == 2 and bias_uid is None:
+                x_uid, y_uid = n.inputs
+                rx, ry = reaches(x_uid), reaches(y_uid)
+                if rx == ry:            # neither, or ambiguous
+                    return None
+                chain, bias = (x_uid, y_uid) if rx else (y_uid, x_uid)
+                bias_uid, bias_scale = bias, outer
+                members.add(cur)
+                cur = chain
+                continue
+            return None
+        return None
+
+    @staticmethod
+    def _is_last_two_swap(t: Node) -> bool:
+        rank = len(t.shape)
+        if rank < 2 or not t.attrs:
+            return False
+        axes = t.attrs[0]
+        if axes is None:
+            return rank == 2
+        want = tuple(range(rank - 2)) + (rank - 1, rank - 2)
+        return tuple(axes) == want
+
+    @staticmethod
+    def _shapes_ok(graph: Graph, q_uid: int, k_uid: int, v_uid: int,
+                   bias_uid: int | None, k_layout: str, qk: Node,
+                   out_mm: Node) -> bool:
+        nodes = graph.nodes
+        q, k, v = nodes[q_uid], nodes[k_uid], nodes[v_uid]
+        rank = len(q.shape)
+        if rank < 2 or len(k.shape) != rank or len(v.shape) != rank:
+            return False
+        lead = q.shape[:-2]
+        if k.shape[:-2] != lead or v.shape[:-2] != lead:
+            return False
+        sq, d = q.shape[-2], q.shape[-1]
+        if k_layout == "std":
+            sk, dk = k.shape[-2], k.shape[-1]
+        else:
+            dk, sk = k.shape[-2], k.shape[-1]
+        sv, dv = v.shape[-2], v.shape[-1]
+        if dk != d or sv != sk:
+            return False
+        if qk.shape != lead + (sq, sk):      # batched-broadcast matmul
+            return False
+        if out_mm.shape != lead + (sq, dv):
+            return False
+        for n in (q, k, v, out_mm):
+            if not np.issubdtype(np.dtype(n.dtype), np.floating):
+                return False
+        if bias_uid is not None:
+            bshape = nodes[bias_uid].shape
+            if len(bshape) > rank:
+                return False
+            target = lead + (sq, sk)
+            for bdim, tdim in zip(reversed(bshape), reversed(target)):
+                if bdim != 1 and bdim != tdim:
+                    return False
+        return True
+
+
+class EpilogueFusionPass(Pass):
+    """Fold a 2-D matmul's consumer cone into an ``epilogue`` cluster.
+
+    Grows a cone of elementwise / last-axis-keepdims-reduction consumers
+    downstream of each unclaimed 2-D matmul (bias adds, activations,
+    rmsnorm chains); every absorbed node's inputs must be inside the cone
+    or independent of the matmul (not its descendants), which makes the
+    region atomic by construction.  The cone is claimed only when the
+    fused kernel's contract holds (single escaping sink of the matmul's
+    shape, tileable operand shapes, reductions row-complete — checked by
+    :func:`repro.kernels.matmul.plan_epilogue`); first with reductions
+    included, then elementwise-only, else the region is left to ``fuse``.
+    """
+
+    name = "epilogue"
+
+    #: ops an epilogue cone may absorb.  ``broadcast_to`` is excluded —
+    #: its static target shape is per-array, not per-tile, so it would
+    #: compute the wrong thing inside a tiled kernel.
+    _EPILOGUE_OPS = (ELEMENTWISE_OPS | {"stop_gradient"})
+
+    def run(self, graph: Graph) -> dict[str, Any]:
+        import jax
+
+        on_tpu = jax.default_backend() == "tpu"
+        nodes = graph.nodes
+        consumers = graph.consumers()
+        out_set = {graph.resolve(o) for o in graph.outputs}
+        fused = 0
+        for uid in list(graph.order):
+            mm = nodes[uid]
+            if (mm.op != "matmul" or mm.cluster is not None
+                    or len(mm.shape) != 2 or len(mm.inputs) != 2):
+                continue
+            if any(len(nodes[d].shape) != 2 for d in mm.inputs):
+                continue
+            desc = self._descendants(uid, consumers)
+            for allow_reductions in (True, False):
+                members = self._grow(graph, uid, desc, allow_reductions)
+                if len(members) < 2:
+                    break
+                meta = self._plan(graph, uid, members, consumers, out_set,
+                                  on_tpu)
+                if meta is not None:
+                    _claim_cluster(graph, members, (meta["sink"],),
+                                   "epilogue", meta)
+                    fused += 1
+                    break
+        return {"fused": fused,
+                "cluster_kinds": _cluster_kind_counts(graph)}
+
+    @staticmethod
+    def _descendants(uid: int, consumers: dict[int, list[int]]) -> set[int]:
+        desc: set[int] = set()
+        stack = [uid]
+        while stack:
+            u = stack.pop()
+            for c in consumers[u]:
+                if c not in desc:
+                    desc.add(c)
+                    stack.append(c)
+        return desc
+
+    def _grow(self, graph: Graph, mm_uid: int, desc: set[int],
+              allow_reductions: bool) -> set[int]:
+        nodes = graph.nodes
+        members = {mm_uid}
+        changed = True
+        while changed:
+            changed = False
+            for u in graph.order:
+                if u in members:
+                    continue
+                n = nodes[u]
+                if n.cluster is not None:
+                    continue
+                ok_op = n.op in self._EPILOGUE_OPS or (
+                    allow_reductions and n.op in REDUCTION_OPS)
+                if not ok_op:
+                    continue
+                if not any(d in members for d in n.inputs):
+                    continue
+                if any(d not in members and d in desc for d in n.inputs):
+                    continue
+                members.add(u)
+                changed = True
+        return members
+
+    def _plan(self, graph: Graph, mm_uid: int, members: set[int],
+              consumers: dict[int, list[int]], out_set: set[int],
+              on_tpu: bool) -> dict[str, Any] | None:
+        from repro.kernels.matmul import plan_epilogue
+
+        nodes = graph.nodes
+        escapes = [u for u in graph.order if u in members
+                   and (u in out_set
+                        or any(c not in members for c in consumers[u]))]
+        if len(escapes) != 1 or escapes[0] == mm_uid:
+            return None
+        sink = escapes[0]
+        mm = nodes[mm_uid]
+        m, n = mm.shape
+        if tuple(nodes[sink].shape) != (m, n):
+            return None
+        lhs_uid, rhs_uid = mm.inputs
+        k = nodes[lhs_uid].shape[1]
+        epi_ext: list[int] = []
+        reductions: list[tuple[Any, bool, int]] = []
+        for u in graph.order:
+            if u not in members or u == mm_uid:
+                continue
+            node = nodes[u]
+            for d in node.inputs:
+                if d not in members and d != mm_uid and d not in epi_ext:
+                    epi_ext.append(d)
+            if node.op in REDUCTION_OPS:
+                if not node.attrs or len(node.attrs) != 2:
+                    return None
+                axis, keepdims = node.attrs
+                reductions.append((axis, bool(keepdims),
+                                   len(nodes[node.inputs[0]].shape)))
+        ext_shapes = [tuple(nodes[d].shape) for d in epi_ext]
+        dtypes = [nodes[u].dtype for u in members] + \
+                 [nodes[d].dtype for d in epi_ext] + \
+                 [nodes[lhs_uid].dtype, nodes[rhs_uid].dtype]
+        tiles = plan_epilogue(m=m, k=k, n=n, reductions=reductions,
+                              extra_shapes=ext_shapes, dtypes=dtypes,
+                              on_tpu=on_tpu)
+        if tiles is None:
+            return None
+        bm, bn, bk = tiles
+        return {"matmul": mm_uid, "lhs": lhs_uid, "rhs": rhs_uid,
+                "sink": sink, "epi_ext": tuple(epi_ext),
+                "bm": bm, "bn": bn, "bk": bk}
+
+
+class FusionPass(Pass):
+    """Partition unclaimed nodes into elementwise/reduction clusters.
+
+    Greedy over topo order: each fusable node (elementwise ops, trailing
+    reductions and their epilogues, ``stop_gradient``/``broadcast_to``)
+    tries to join the union of its producers' clusters.  A merge is legal
+    iff no path leaves the merged region and re-enters it (the region must
+    execute atomically); checked with precomputed ancestor/descendant
+    bitsets — ``bad = desc(region) & anc(region) & ~region``.  Clusters
+    smaller than ``min_cluster_size`` are dissolved back to single
+    dispatches.  Pre-existing matcher clusters (attention/epilogue) are
+    preserved: their members are skipped, and the bitsets cover all nodes,
+    so a region that would wrap around a matcher cluster is rejected.
+
+    A cluster containing at least one reduction is tagged
+    ``kind="reduction"``; pure elementwise regions stay ``elementwise``.
     """
 
     name = "fuse"
@@ -165,7 +692,6 @@ class FusionPass(Pass):
         self.min_cluster_size = min_cluster_size
 
     def run(self, graph: Graph) -> dict[str, Any]:
-        graph.clear_clusters()
         order = graph.order
         idx = {uid: i for i, uid in enumerate(order)}
         consumers = graph.consumers()
@@ -198,7 +724,7 @@ class FusionPass(Pass):
 
         for uid in order:
             node = graph.nodes[uid]
-            if node.op not in ELEMENTWISE_OPS:
+            if node.op not in FUSABLE_OPS or node.cluster is not None:
                 continue
             cands = sorted({cluster_of[d] for d in node.inputs
                             if d in cluster_of})
@@ -222,7 +748,7 @@ class FusionPass(Pass):
                 cluster_of[uid] = len(clusters)
                 clusters.append({uid})
 
-        graph.clusters = []
+        n_before = len(graph.clusters)
         out_set = set(graph.resolve(o) for o in graph.outputs)
         for members in clusters:
             if len(members) < self.min_cluster_size:
@@ -240,19 +766,26 @@ class FusionPass(Pass):
                 if (uid in out_set
                         or any(c not in members for c in consumers[uid])):
                     outputs.append(uid)
+            kind = ("reduction"
+                    if any(graph.nodes[u].op in REDUCTION_OPS
+                           for u in node_ids) else "elementwise")
             graph.clusters.append(Cluster(cid, node_ids, tuple(ext_inputs),
-                                          tuple(outputs)))
-        clustered = sum(len(c.node_ids) for c in graph.clusters)
-        return {"clusters": len(graph.clusters),
+                                          tuple(outputs), kind=kind))
+        new = graph.clusters[n_before:]
+        clustered = sum(len(c.node_ids) for c in new)
+        return {"clusters": len(new),
                 "clustered_nodes": clustered,
                 "largest_cluster": max(
-                    (len(c.node_ids) for c in graph.clusters), default=0)}
+                    (len(c.node_ids) for c in new), default=0),
+                "cluster_kinds": _cluster_kind_counts(graph)}
 
 
 PASS_REGISTRY: dict[str, type[Pass]] = {
     "cse": CSEPass,
     "fold": ConstantFoldPass,
     "dce": DCEPass,
+    "attention": AttentionMatchPass,
+    "epilogue": EpilogueFusionPass,
     "fuse": FusionPass,
 }
 

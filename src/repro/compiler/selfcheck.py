@@ -68,7 +68,7 @@ def _dead_branch(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
 def _diamond(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     a = ops.add(x, ops.full_like(x, 1.0))
     left = ops.exp(a)
-    right = ops.sum(a, axis=-1, keepdims=True)   # reduction splits clusters
+    right = ops.sum(a, axis=-1, keepdims=True)   # reduction joins the cluster
     return [ops.mul(left, ops.broadcast_to(right, left.shape))], None
 
 
@@ -97,6 +97,46 @@ def _random_opaque(ops: Any, x: Any) -> tuple[list, tuple[int, ...] | None]:
     return [ops.add(x, ops.mul(noise, noise))], None
 
 
+def _softmax_attention(ops: Any, x: Any
+                       ) -> tuple[list, tuple[int, ...] | None]:
+    # plain-ops softmax(QK^T * scale)V on rank-2 operands — exercised by
+    # the attention matcher (x is 4x8; q/k/v derive from it)
+    q = ops.tanh(x)
+    k = ops.mul(x, ops.full_like(x, 0.5))
+    v = ops.add(x, ops.full_like(x, 1.0))
+    s = ops.mul(ops.matmul(q, ops.transpose(k, (1, 0))),
+                ops.full((4, 4), 0.3535))
+    m = ops.max(s, axis=-1, keepdims=True)
+    e = ops.exp(ops.sub(s, ops.stop_gradient(m)))
+    p = ops.div(e, ops.sum(e, axis=-1, keepdims=True))
+    return [ops.matmul(p, v)], None
+
+
+def _sigmoid_attention(ops: Any, x: Any
+                       ) -> tuple[list, tuple[int, ...] | None]:
+    s = ops.matmul(x, ops.transpose(x, (1, 0)))
+    ones = ops.full((4, 4), 1.0)
+    p = ops.div(ones, ops.add(ones, ops.exp(ops.neg(s))))
+    return [ops.matmul(p, ops.abs(x))], None
+
+
+def _matmul_epilogue(ops: Any, x: Any
+                     ) -> tuple[list, tuple[int, ...] | None]:
+    # matmul + bias + gelu: the epilogue matcher folds the consumers
+    w = ops.full((x.shape[-1], 8), 0.1)
+    b = ops.iota(jnp.float32, (8,), 0)
+    return [ops.gelu(ops.add(ops.matmul(x, w), b))], None
+
+
+def _reduction_tail(ops: Any, x: Any
+                    ) -> tuple[list, tuple[int, ...] | None]:
+    # elementwise chain ending in a reduction plus epilogue (mean-style):
+    # the fusion pass absorbs the whole thing into one reduction cluster
+    t = ops.tanh(ops.mul(x, ops.full_like(x, 0.25)))
+    s = ops.sum(t, axis=-1, keepdims=True)
+    return [ops.mul(s, ops.full_like(s, 1.0 / 8.0))], None
+
+
 CORPUS: dict[str, Callable] = {
     "chain": _chain,
     "shared_subexpr": _shared_subexpr,
@@ -106,11 +146,19 @@ CORPUS: dict[str, Callable] = {
     "mixed_dtype": _mixed_dtype,
     "const_heavy": _const_heavy,
     "random_opaque": _random_opaque,
+    "softmax_attention": _softmax_attention,
+    "sigmoid_attention": _sigmoid_attention,
+    "matmul_epilogue": _matmul_epilogue,
+    "reduction_tail": _reduction_tail,
 }
 
 PIPELINES: tuple[tuple[str, ...], ...] = (
     ("cse",), ("fold",), ("dce",), ("fuse",),
-    ("cse", "fold", "dce", "fuse"),      # the default
+    ("attention", "fuse"),               # matcher alone + residual fusion
+    ("epilogue", "fuse"),
+    ("cse", "fold", "dce",
+     "attention", "epilogue", "fuse"),   # the default
+    ("cse", "fold", "dce", "fuse"),      # pre-matcher default
     ("fold", "cse", "dce", "fuse"),      # permuted
     ("fuse", "cse", "dce"),              # fusion first
     (),                                  # legacy / identity

@@ -1,21 +1,33 @@
-"""Generated elementwise cluster kernels.
+"""Generated cluster kernels for the compiler's fused regions.
 
-The compiler's fusion pass partitions a traced graph into elementwise
-regions; this module *synthesizes* one Pallas kernel per region — the body
-is generated from the cluster's op list, reading every external input once
-from VMEM, running the region's ops on register values, and writing each
-external output once.  That is the ArrayFire-JIT payoff (paper §4.1.1,
-Fig. 2) made concrete: N dispatches collapse into a single kernel whose
-arithmetic intensity grows with the cluster.
+The compiler's fusion/matcher passes partition a traced graph into
+clusters of four kinds; this module synthesizes or dispatches one kernel
+per cluster:
 
-Off-TPU the kernel runs under ``interpret=True`` (reference semantics, same
-numerics); shapes/dtypes the TPU lowering cannot tile fall back to a
-per-cluster ``jax.jit`` of the same synthesized body — fusion is an
-optimization, never a correctness constraint.
+* ``elementwise`` / ``reduction`` — the body is generated from the
+  cluster's op list (:func:`make_body`), reading every external input once
+  from VMEM, running the region's ops on register values, and writing each
+  external output once.  That is the ArrayFire-JIT payoff (paper §4.1.1,
+  Fig. 2) made concrete: N dispatches collapse into a single kernel whose
+  arithmetic intensity grows with the cluster.  Reduction-tailed regions
+  (softmax denominators, mean chains) ride the same whole-array kernel —
+  the body replays the ops' own closures, so mixed shapes are exact.
+* ``epilogue`` — a 2-D matmul plus its consumer cone; the synthesized
+  epilogue body is folded into the tiled matmul kernel's store step
+  (:func:`repro.kernels.matmul.matmul_epilogue`).
+* ``attention`` — an ``act(scale·(q@kᵀ) + bias) @ v`` match; lowered to
+  the parameterized flash-attention template
+  (:func:`repro.kernels.flash_attention.attention_template`).
+
+Off-TPU the kernels run under ``interpret=True`` (reference semantics);
+shapes/dtypes the TPU lowering cannot tile fall back to a per-cluster
+``jax.jit`` of the same synthesized body — fusion is an optimization,
+never a correctness constraint.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Any, Callable, Sequence
 
 import jax
@@ -49,21 +61,23 @@ def make_body(nodes: Sequence[Any], input_ids: Sequence[int],
 
 def pallas_supported(nodes: Sequence[Any], input_nodes: Sequence[Any],
                      on_tpu: bool) -> bool:
-    """Can this cluster become a single ``pallas_call``?
+    """Can this elementwise/reduction cluster become one ``pallas_call``?
 
-    Requires one common shape across members and external inputs (the
-    generated body does no in-kernel broadcasting) and — on TPU only —
-    MXU/VPU-tileable shapes and dtypes; interpret mode accepts anything.
+    Off-TPU the whole-array kernel replays the body under interpret mode,
+    which is exact for any mix of shapes (implicit broadcasting,
+    keepdims/keepdims-less reductions); only rank-0 values are kept on the
+    jit path.  On TPU the tiling is conservative: one common VPU-tileable
+    shape and supported dtypes.
     """
     shapes = {tuple(n.shape) for n in nodes}
     shapes |= {tuple(n.shape) for n in input_nodes}
-    if len(shapes) != 1:
-        return False
-    (shape,) = shapes
-    if len(shape) == 0:
+    if any(len(s) == 0 for s in shapes):
         return False
     if not on_tpu:
         return True
+    if len(shapes) != 1:
+        return False
+    (shape,) = shapes
     if len(shape) < 2 or shape[-1] % 128 != 0 or shape[-2] % 8 != 0:
         return False
     dtypes = {jnp.dtype(n.dtype) for n in list(nodes) + list(input_nodes)}
@@ -106,3 +120,134 @@ def build_jit_cluster(nodes: Sequence[Any], input_nodes: Sequence[Any],
     body = make_body(nodes, [n.uid for n in input_nodes],
                      [n.uid for n in output_nodes])
     return jax.jit(body)
+
+
+# -- attention clusters ------------------------------------------------------
+
+
+def attention_supported(input_nodes: Sequence[Any], meta: dict,
+                        on_tpu: bool) -> bool:
+    """Does the matched attention cluster satisfy the template's tile
+    contract?  Off-TPU (interpret) the template takes any match; on TPU
+    every dimension must be lane/MXU aligned — otherwise lowering falls
+    back to a per-cluster ``jax.jit`` of the cluster body."""
+    from repro.kernels.flash_attention import template_supported
+
+    by_uid = {n.uid: n for n in input_nodes}
+    q = by_uid.get(meta["q"])
+    k = by_uid.get(meta["k"])
+    v = by_uid.get(meta["v"])
+    if q is None or k is None or v is None:
+        return False
+    sq, d = q.shape[-2], q.shape[-1]
+    sk = k.shape[-2] if meta["k_layout"] == "std" else k.shape[-1]
+    dv = v.shape[-1]
+    dtypes = [q.dtype, k.dtype, v.dtype]
+    return template_supported(sq=sq, sk=sk, d=d, dv=dv, dtypes=dtypes,
+                              on_tpu=on_tpu)
+
+
+def build_attention_cluster(input_nodes: Sequence[Any],
+                            output_nodes: Sequence[Any], meta: dict,
+                            interpret: bool = True) -> Callable:
+    """Lower a matched attention cluster to the flash-style template.
+
+    Maps the cluster's positional inputs to their matched roles (q/k/v and
+    the optional additive bias), flattens leading batch dims, and calls
+    :func:`repro.kernels.flash_attention.attention_template`.  Unused
+    cluster inputs (the uniform consts the matcher peeled — scales, the
+    sigmoid ones) are accepted positionally and ignored.
+    """
+    from repro.kernels import flash_attention as fa
+
+    pos = {n.uid: i for i, n in enumerate(input_nodes)}
+    by_uid = {n.uid: n for n in input_nodes}
+    q_i, k_i, v_i = pos[meta["q"]], pos[meta["k"]], pos[meta["v"]]
+    bias_uid = meta["bias"]
+    b_i = pos[bias_uid] if bias_uid is not None else None
+
+    q_shape = tuple(by_uid[meta["q"]].shape)
+    k_shape = tuple(by_uid[meta["k"]].shape)
+    v_shape = tuple(by_uid[meta["v"]].shape)
+    lead = q_shape[:-2]
+    n_batch = math.prod(lead) if lead else 1
+    sq, d = q_shape[-2], q_shape[-1]
+    sk = k_shape[-2] if meta["k_layout"] == "std" else k_shape[-1]
+    dv = v_shape[-1]
+    out_node = output_nodes[0]
+    out_shape, out_dtype = tuple(out_node.shape), out_node.dtype
+
+    bias_spec = "none"
+    if bias_uid is not None:
+        bshape = tuple(by_uid[bias_uid].shape)
+        bias_spec = ("3d" if len(bshape) > 2
+                     and any(x != 1 for x in bshape[:-2]) else "2d")
+
+    bq = 128 if sq % 128 == 0 else sq
+    bk = 128 if sk % 128 == 0 else sk
+    mode, scale = meta["mode"], float(meta["scale"])
+    bias_scale, k_layout = float(meta["bias_scale"]), meta["k_layout"]
+
+    def run_impl(*vals):
+        q3 = vals[q_i].reshape((n_batch, sq, d))
+        if k_layout == "std":
+            k3 = vals[k_i].reshape((n_batch, sk, d))
+        else:
+            k3 = vals[k_i].reshape((n_batch, d, sk))
+        v3 = vals[v_i].reshape((n_batch, sk, dv))
+        bias = None
+        if b_i is not None:
+            if bias_spec == "3d":
+                bias = jnp.broadcast_to(
+                    vals[b_i], lead + (sq, sk)).reshape(n_batch, sq, sk)
+            else:
+                bias = jnp.broadcast_to(vals[b_i], (sq, sk))
+        out = fa.attention_template(
+            q3, k3, v3, bias, mode=mode, scale=scale,
+            bias_scale=bias_scale, k_layout=k_layout, bias_spec=bias_spec,
+            bq=bq, bk=bk, interpret=interpret)
+        return (out.reshape(out_shape).astype(out_dtype),)
+
+    run = jax.jit(run_impl)
+    return run
+
+
+# -- epilogue clusters -------------------------------------------------------
+
+
+def build_epilogue_cluster(nodes: Sequence[Any], input_nodes: Sequence[Any],
+                           output_nodes: Sequence[Any], meta: dict,
+                           interpret: bool = True) -> Callable:
+    """Lower an epilogue cluster: the matmul member runs on the tiled MXU
+    kernel, and the synthesized epilogue body executes on each output tile
+    at the final K step (:func:`repro.kernels.matmul.matmul_epilogue`)."""
+    from repro.kernels import matmul as mm_mod
+
+    mm_uid = meta["matmul"]
+    epi_members = [n for n in nodes if n.uid != mm_uid]
+    body = make_body(epi_members, [mm_uid, *meta["epi_ext"]],
+                     [output_nodes[0].uid])
+    pos = {n.uid: i for i, n in enumerate(input_nodes)}
+    by_uid = {n.uid: n for n in input_nodes}
+    lhs_i, rhs_i = pos[meta["lhs"]], pos[meta["rhs"]]
+    extra_is = [pos[u] for u in meta["epi_ext"]]
+    extra_shapes = [tuple(by_uid[u].shape) for u in meta["epi_ext"]]
+
+    lhs_n, rhs_n = by_uid[meta["lhs"]], by_uid[meta["rhs"]]
+    m, k = lhs_n.shape
+    n = rhs_n.shape[1]
+    mm_dtype = jnp.promote_types(lhs_n.dtype, rhs_n.dtype)
+    out_node = output_nodes[0]
+
+    call = mm_mod.matmul_epilogue(
+        body, m=m, k=k, n=n, extra_shapes=extra_shapes,
+        out_dtype=out_node.dtype, mm_dtype=mm_dtype,
+        bm=meta["bm"], bn=meta["bn"], bk=meta["bk"], interpret=interpret)
+
+    def run(*vals):
+        out = call(vals[lhs_i], vals[rhs_i],
+                   *[vals[i] for i in extra_is])
+        return (out,)
+
+    run.__name__ = "pallas_epilogue_matmul"
+    return run

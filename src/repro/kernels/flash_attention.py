@@ -67,6 +67,137 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                     / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def template_supported(*, sq: int, sk: int, d: int, dv: int,
+                       dtypes, on_tpu: bool) -> bool:
+    """Tile contract of :func:`attention_template`.
+
+    Off-TPU the template runs under interpret mode and takes any shapes;
+    on TPU every dimension must be MXU/lane aligned and the dtypes
+    restricted — callers fall back to a per-cluster ``jax.jit`` when this
+    returns False.
+    """
+    if min(sq, sk, d, dv) < 1:
+        return False
+    if not on_tpu:
+        return True
+    if sq % 128 or sk % 128 or d % 128 or dv % 128:
+        return False
+    return all(jnp.dtype(t) in (jnp.float32, jnp.bfloat16) for t in dtypes)
+
+
+def _template_kernel(*refs, mode: str, scale: float, bias_scale: float,
+                     k_layout: str, bias_spec: str, n_kb: int):
+    q_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
+    idx = 3
+    b_ref = None
+    if bias_spec != "none":
+        b_ref = refs[idx]
+        idx += 1
+    o_ref = refs[idx]
+    m_scr, l_scr, acc_scr = refs[idx + 1], refs[idx + 2], refs[idx + 3]
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]
+    dims = ((((1,), (1,)), ((), ())) if k_layout == "std"
+            else (((1,), (0,)), ((), ())))
+    s = jax.lax.dot_general(
+        q, k_ref[0], dims, preferred_element_type=jnp.float32) * scale
+    if bias_spec == "3d":
+        s = s + bias_scale * b_ref[0].astype(jnp.float32)
+    elif bias_spec == "2d":
+        s = s + bias_scale * b_ref[...].astype(jnp.float32)
+
+    if mode == "sigmoid":
+        # sigmoid weights are linear in v: plain accumulation, no rescale
+        p = 1.0 / (1.0 + jnp.exp(-s))
+        acc_scr[...] += jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(kb == n_kb - 1)
+        def _store_sigmoid():
+            o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+    else:
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+        @pl.when(kb == n_kb - 1)
+        def _store_softmax():
+            o_ref[0] = (acc_scr[...]
+                        / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "scale", "bias_scale",
+                                             "k_layout", "bias_spec",
+                                             "bq", "bk", "interpret"))
+def attention_template(q, k, v, bias=None, *, mode: str = "softmax",
+                       scale: float = 1.0, bias_scale: float = 1.0,
+                       k_layout: str = "std", bias_spec: str = "none",
+                       bq: int = 128, bk: int = 128,
+                       interpret: bool = False):
+    """Parameterized fused attention for compiler-matched subgraphs:
+    ``out = act(scale·(q@kᵀ) + bias_scale·bias) @ v``.
+
+    ``q``: [N, Sq, D]; ``k``: [N, Sk, D] (``k_layout="std"``) or
+    [N, D, Sk] (``"kT"``, the rhs was already transposed); ``v``:
+    [N, Sk, Dv]; ``bias``: None / [Sq, Sk] / [N, Sq, Sk] per
+    ``bias_spec`` — custom additive masks and ALiBi slopes arrive here.
+    ``mode`` selects the activation: online-softmax with running (m, l)
+    statistics (always max-shifted — a mathematically-identical, safer
+    ordering even when the matched graph skipped the shift) or sigmoid
+    (linear in v, plain accumulation).  Built on the same tiling scheme
+    as :func:`flash_attention`; grid (N, Sq/bq, Sk/bk).
+    """
+    n, sq, d = q.shape
+    sk = k.shape[1] if k_layout == "std" else k.shape[2]
+    dv = v.shape[2]
+    bq, bk = min(bq, sq), min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    n_kb = sk // bk
+    grid = (n, sq // bq, n_kb)
+    in_specs = [pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0))]
+    if k_layout == "std":
+        in_specs.append(pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)))
+    else:
+        in_specs.append(pl.BlockSpec((1, d, bk), lambda b, i, j: (b, 0, j)))
+    in_specs.append(pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)))
+    operands = [q, k, v]
+    if bias_spec == "3d":
+        in_specs.append(pl.BlockSpec((1, bq, bk), lambda b, i, j: (b, i, j)))
+        operands.append(bias)
+    elif bias_spec == "2d":
+        in_specs.append(pl.BlockSpec((bq, bk), lambda b, i, j: (i, j)))
+        operands.append(bias)
+    return pl.pallas_call(
+        functools.partial(_template_kernel, mode=mode, scale=scale,
+                          bias_scale=bias_scale, k_layout=k_layout,
+                          bias_spec=bias_spec, n_kb=n_kb),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "softcap", "bq", "bk",
                                              "interpret"))

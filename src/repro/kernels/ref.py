@@ -38,6 +38,27 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)
 
 
+def attention_variant(q, k, v, *, mode: str = "softmax", scale: float = 1.0,
+                      bias=None, bias_scale: float = 1.0):
+    """Oracle for the compiler's parameterized attention template:
+    ``act(scale * QK^T + bias_scale * bias) V`` with ``act`` softmax
+    (row-normalized) or sigmoid (per-score, the normalizer-free variant).
+
+    q, k, v: [..., S, D] with matching leading dims; ``bias`` must
+    broadcast against the [..., Sq, Sk] score matrix (e.g. an ALiBi
+    distance penalty or an additive mask).
+    """
+    scores = jnp.einsum("...qd,...kd->...qk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if bias is not None:
+        scores = scores + bias_scale * bias.astype(jnp.float32)
+    if mode == "sigmoid":
+        w = jax.nn.sigmoid(scores)
+    else:
+        w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", w.astype(v.dtype), v)
+
+
 def flash_decode(q, k, v, valid, *, scale: float | None = None):
     """q: [BH, D]; k,v: [BH, S, D]; valid: [S] or per-row [BH, S] bool
     -> [BH, D]."""

@@ -136,12 +136,19 @@ class CompilerPolicy:
     pipeline:
         ordered pass names run by the ``PassManager`` (see
         ``repro.compiler.passes.PASS_REGISTRY``); ``()`` is the legacy
-        lazy path — no rewrites, node-at-a-time evaluation.
+        lazy path — no rewrites, node-at-a-time evaluation.  The default
+        runs the matcher passes (``attention`` — softmax/sigmoid
+        ``QK^TV`` subgraphs to the flash template; ``epilogue`` — matmul
+        consumer cones into the tiled matmul kernel) before ``fuse``
+        partitions the remainder into elementwise/reduction clusters.
     lowering:
-        ``"auto"`` — fused elementwise clusters become *generated* Pallas
-        kernels (``interpret=True`` off-TPU) with a per-cluster ``jax.jit``
-        fallback for unsupported ops/dtypes; ``"jit"`` — always the jit
-        fallback; ``"eager"`` — clusters run un-compiled (debugging).
+        ``"auto"`` — fused clusters become *generated* Pallas kernels
+        (``interpret=True`` off-TPU) dispatched by cluster kind
+        (elementwise/reduction body, fused-epilogue matmul, attention
+        template) with a per-cluster ``jax.jit`` fallback for
+        unsupported ops/dtypes/tile contracts; ``"jit"`` — always the
+        jit fallback; ``"eager"`` — clusters run un-compiled
+        (debugging).
     fold_size_limit:
         constant folding only precomputes nodes up to this many elements
         (guards compile-time blowup on huge constants).
@@ -154,7 +161,8 @@ class CompilerPolicy:
         recompile).
     """
 
-    pipeline: tuple[str, ...] = ("cse", "fold", "dce", "fuse")
+    pipeline: tuple[str, ...] = ("cse", "fold", "dce",
+                                 "attention", "epilogue", "fuse")
     lowering: str = "auto"
     fold_size_limit: int = 1 << 16
     min_cluster_size: int = 2

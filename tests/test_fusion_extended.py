@@ -1,0 +1,372 @@
+"""Extended fusion: reduction clusters, matmul-epilogue folding, and the
+attention pattern matcher — numerics vs eager/oracles, kernel counts, and
+cluster-kind provenance in dump()/describe()."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.compiler import CompilerPolicy, PassManager, trace
+from repro.core.tensor import ops
+from repro.core.tensor.lazy_backend import LazyBackend
+from repro.kernels import ref
+
+
+def _kinds(exe):
+    return [c["kind"] for c in exe.describe()["clusters"]]
+
+
+# --------------------------------------------------------------------------
+# reduction fusion: trailing reductions + epilogues join the cluster
+# --------------------------------------------------------------------------
+
+
+def test_softmax_denominator_chain_fuses_to_one_reduction_kernel():
+    @repro.compile
+    def f(x):
+        e = ops.exp(ops.sub(x, ops.stop_gradient(
+            ops.max(x, axis=-1, keepdims=True))))
+        return ops.div(e, ops.sum(e, axis=-1, keepdims=True))
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 16), jnp.float32)
+    got = f(x)
+    exe = f.last_executable
+    assert exe.n_dispatches == 1 and exe.n_kernels == 1
+    assert _kinds(exe) == ["reduction"]
+    want = jax.nn.softmax(x, axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_mean_chain_fuses_and_matches_eager_bitwise():
+    # sum -> scale -> sub: a mean-centering chain, reduction mid-cluster
+    @repro.compile
+    def f(x):
+        s = ops.sum(x, axis=-1, keepdims=True)
+        mean = ops.mul(s, ops.full_like(s, 1.0 / 16.0))
+        return ops.sub(x, ops.broadcast_to(mean, (8, 16)))
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16), jnp.float32)
+    got = f(x)
+    exe = f.last_executable
+    assert exe.n_dispatches == 1 and exe.n_kernels == 1
+    assert _kinds(exe) == ["reduction"]
+    s = jnp.sum(x, axis=-1, keepdims=True)
+    want = x - jnp.broadcast_to(s * jnp.full_like(s, 1.0 / 16.0), (8, 16))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+_RED_SHAPE = (4, 8)
+# bitwise family: ops whose fusion into a reduction XLA compiles without
+# changing the last ulp.  Chains of two+ trig ops feeding a reduction
+# legally diverge by 1 ulp under ANY compiled execution (even plain
+# jax.jit) — they belong to the 2-ulp family below, with mul-feeds-add.
+_UNARY_SAFE = ["tanh", "neg", "abs"]
+_UNARY_ALL = ["tanh", "neg", "abs", "sin", "cos"]
+_RED = [("sum", -1, True), ("sum", -1, False), ("sum", None, False),
+        ("max", -1, True), ("min", -1, True)]
+
+
+def _reduction_program(prefix, red, suffix, x, contraction_safe=True):
+    """Elementwise prefix -> one reduction -> elementwise epilogue.
+
+    ``contraction_safe`` keeps the graph in the bitwise family: safe
+    unaries only and ``maximum`` instead of ``add`` (no FMA contraction).
+    """
+    unary = _UNARY_SAFE if contraction_safe else _UNARY_ALL
+    pool = [x]
+    for kind, j in prefix:
+        a = pool[j % len(pool)]
+        if kind < len(unary):
+            v = getattr(ops, unary[kind % len(unary)])(a)
+        else:
+            b = pool[(kind - len(unary)) % len(pool)]
+            v = ops.maximum(a, b) if contraction_safe else ops.add(a, b)
+        pool.append(v)
+    op, axis, keepdims = _RED[red % len(_RED)]
+    r = getattr(ops, op)(pool[-1], axis=axis, keepdims=keepdims)
+    for kind in suffix:
+        r = getattr(ops, unary[kind % len(unary)])(r)
+    return r
+
+
+@settings(max_examples=20, deadline=None)
+@given(prefix=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 9)),
+                       min_size=1, max_size=6),
+       red=st.integers(0, 10),
+       suffix=st.lists(st.integers(0, 9), min_size=0, max_size=3),
+       seed=st.integers(0, 100))
+def test_reduction_tailed_graphs_match_eager_f32_bitwise(prefix, red,
+                                                         suffix, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), _RED_SHAPE, jnp.float32)
+    eager = _reduction_program(prefix, red, suffix, x)
+    compiled = repro.compile(
+        lambda v: _reduction_program(prefix, red, suffix, v))
+    got = compiled(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(eager))
+    assert compiled.last_executable.n_kernels >= 1
+    assert "reduction" in _kinds(compiled.last_executable)
+
+
+@settings(max_examples=10, deadline=None)
+@given(prefix=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 9)),
+                       min_size=1, max_size=6),
+       red=st.integers(0, 10),
+       suffix=st.lists(st.integers(0, 9), min_size=0, max_size=3),
+       seed=st.integers(0, 100))
+def test_reduction_tailed_unrestricted_within_two_ulp(prefix, red, suffix,
+                                                      seed):
+    """With mul-feeds-add allowed, fused FMA contraction may flip the
+    last ulp — never more."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), _RED_SHAPE, jnp.float32)
+    eager = np.asarray(
+        _reduction_program(prefix, red, suffix, x, contraction_safe=False),
+        np.float64)
+    compiled = repro.compile(lambda v: _reduction_program(
+        prefix, red, suffix, v, contraction_safe=False))
+    got = np.asarray(compiled(x), np.float64)
+    np.testing.assert_allclose(got, eager, rtol=2.4e-7, atol=1e-37)
+
+
+# --------------------------------------------------------------------------
+# attention matcher: softmax/sigmoid QK^TV variants -> one template kernel
+# --------------------------------------------------------------------------
+
+# dot_general inside the (interpreted) template legally differs from
+# eager matmul by ~1 ulp per contraction step; scores then pass through
+# exp, so equality is tolerance-based, not bitwise.
+_ATTN_RTOL, _ATTN_ATOL = 3e-6, 2e-6
+
+
+def _attn_program(q, k, v, *, mode, shifted, scale, bias=None):
+    s = ops.matmul(q, ops.transpose(k, tuple(range(q.ndim - 2))
+                                    + (q.ndim - 1, q.ndim - 2)))
+    if scale != 1.0:
+        s = ops.mul(s, ops.full_like(s, scale))
+    if bias is not None:
+        s = ops.add(s, bias)
+    if mode == "sigmoid":
+        ones = ops.full_like(s, 1.0)
+        p = ops.div(ones, ops.add(ones, ops.exp(ops.neg(s))))
+    else:
+        if shifted:
+            m = ops.max(s, axis=-1, keepdims=True)
+            s = ops.sub(s, ops.stop_gradient(m))
+        e = ops.exp(s)
+        p = ops.div(e, ops.sum(e, axis=-1, keepdims=True))
+    return ops.matmul(p, v)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mode=st.sampled_from(["softmax", "sigmoid"]),
+       shifted=st.booleans(),
+       scale=st.sampled_from([1.0, 0.125, 0.5]),
+       batched=st.booleans(),
+       sq=st.sampled_from([8, 16]),
+       sk=st.sampled_from([8, 32]),
+       d=st.sampled_from([4, 8]),
+       seed=st.integers(0, 50))
+def test_attention_shaped_graphs_lower_to_one_template_kernel(
+        mode, shifted, scale, batched, sq, sk, d, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    lead = (2,) if batched else ()
+    q = jax.random.normal(keys[0], lead + (sq, d), jnp.float32)
+    k = jax.random.normal(keys[1], lead + (sk, d), jnp.float32)
+    v = jax.random.normal(keys[2], lead + (sk, d), jnp.float32)
+    compiled = repro.compile(lambda a, b, c: _attn_program(
+        a, b, c, mode=mode, shifted=shifted, scale=scale))
+    got = compiled(q, k, v)
+    exe = compiled.last_executable
+    assert exe.n_dispatches == 1 and exe.n_kernels == 1
+    assert _kinds(exe) == ["attention"]
+    want = ref.attention_variant(q, k, v, mode=mode, scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=_ATTN_RTOL, atol=_ATTN_ATOL)
+
+
+def test_sigmoid_attention_matches_oracle():
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(keys[0], (16, 8), jnp.float32)
+    k = jax.random.normal(keys[1], (24, 8), jnp.float32)
+    v = jax.random.normal(keys[2], (24, 8), jnp.float32)
+    compiled = repro.compile(lambda a, b, c: _attn_program(
+        a, b, c, mode="sigmoid", shifted=False, scale=0.3535))
+    got = compiled(q, k, v)
+    exe = compiled.last_executable
+    assert exe.n_dispatches == 1 and _kinds(exe) == ["attention"]
+    want = ref.attention_variant(q, k, v, mode="sigmoid", scale=0.3535)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=_ATTN_RTOL, atol=_ATTN_ATOL)
+
+
+def test_alibi_bias_attention_matches_oracle():
+    # per-head additive distance penalty: bias[h, i, j] = -slope_h |i - j|
+    H, S, D = 2, 16, 8
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(keys[0], (H, S, D), jnp.float32)
+    k = jax.random.normal(keys[1], (H, S, D), jnp.float32)
+    v = jax.random.normal(keys[2], (H, S, D), jnp.float32)
+    pos = np.arange(S, dtype=np.float32)
+    dist = -np.abs(pos[:, None] - pos[None, :])
+    slopes = np.asarray([0.25, 0.0625], np.float32)
+    alibi = jnp.asarray(slopes[:, None, None] * dist[None])
+    compiled = repro.compile(lambda a, b, c, bias: _attn_program(
+        a, b, c, mode="softmax", shifted=True, scale=0.3535, bias=bias))
+    got = compiled(q, k, v, alibi)
+    exe = compiled.last_executable
+    assert exe.n_dispatches == 1 and _kinds(exe) == ["attention"]
+    want = ref.attention_variant(q, k, v, scale=0.3535, bias=alibi)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=_ATTN_RTOL, atol=_ATTN_ATOL)
+
+
+def test_additive_mask_attention_matches_oracle():
+    S, D = 16, 8
+    keys = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(keys[0], (S, D), jnp.float32)
+    k = jax.random.normal(keys[1], (S, D), jnp.float32)
+    v = jax.random.normal(keys[2], (S, D), jnp.float32)
+    # additive causal-ish mask: large negative above the diagonal
+    mask = jnp.asarray(np.triu(np.full((S, S), -1e9, np.float32), k=1))
+    compiled = repro.compile(lambda a, b, c, m: _attn_program(
+        a, b, c, mode="softmax", shifted=True, scale=1.0, bias=m))
+    got = compiled(q, k, v, mask)
+    exe = compiled.last_executable
+    assert exe.n_dispatches == 1 and _kinds(exe) == ["attention"]
+    want = ref.attention_variant(q, k, v, bias=mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=_ATTN_RTOL, atol=_ATTN_ATOL)
+
+
+def test_attention_jit_fallback_under_lowering_jit():
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(keys[0], (16, 8), jnp.float32)
+    k = jax.random.normal(keys[1], (16, 8), jnp.float32)
+    v = jax.random.normal(keys[2], (16, 8), jnp.float32)
+    policy = CompilerPolicy(lowering="jit")
+    compiled = repro.compile(policy=policy)(
+        lambda a, b, c: _attn_program(a, b, c, mode="softmax",
+                                      shifted=True, scale=0.3535))
+    got = compiled(q, k, v)
+    exe = compiled.last_executable
+    # still one fused dispatch, but through the per-cluster jit fallback
+    assert exe.n_dispatches == 1 and exe.n_kernels == 0
+    steps = exe.describe()["clusters"]
+    assert steps == [{"kind": "attention", "lowering": "jit",
+                      "n_ops": steps[0]["n_ops"]}]
+    want = ref.attention_variant(q, k, v, scale=0.3535)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=_ATTN_RTOL, atol=_ATTN_ATOL)
+
+
+# --------------------------------------------------------------------------
+# matmul epilogue fusion
+# --------------------------------------------------------------------------
+
+
+def test_matmul_bias_gelu_one_kernel_vs_three_legacy_dispatches():
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.normal(keys[0], (32, 16), jnp.float32)
+    w = jax.random.normal(keys[1], (16, 24), jnp.float32)
+    b = jax.random.normal(keys[2], (24,), jnp.float32)
+
+    def f(x, w, b):
+        return ops.gelu(ops.add(ops.matmul(x, w), b))
+
+    fused = repro.compile(f)
+    got = fused(x, w, b)
+    exe = fused.last_executable
+    assert exe.n_dispatches == 1 and exe.n_kernels == 1
+    assert _kinds(exe) == ["epilogue"]
+    legacy = repro.compile(policy=CompilerPolicy.legacy())(f)
+    legacy(x, w, b)
+    assert legacy.last_executable.n_dispatches >= 3
+    want = jax.nn.gelu(x @ w + b, approximate=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_rmsnorm_epilogue_fuses_row_reduction():
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    x = jax.random.normal(keys[0], (16, 8), jnp.float32)
+    w = jax.random.normal(keys[1], (8, 32), jnp.float32)
+    g = jax.random.normal(keys[2], (32,), jnp.float32)
+
+    @repro.compile
+    def f(x, w, g):
+        h = ops.matmul(x, w)
+        ms = ops.mul(ops.sum(ops.mul(h, h), axis=-1, keepdims=True),
+                     ops.full((16, 1), 1.0 / 32.0))
+        return ops.mul(ops.mul(h, ops.rsqrt(ops.add(
+            ms, ops.full((16, 1), 1e-6)))), g)
+
+    got = f(x, w, g)
+    exe = f.last_executable
+    assert exe.n_dispatches == 1 and exe.n_kernels == 1
+    assert _kinds(exe) == ["epilogue"]
+    h = x @ w
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    want = h * jax.lax.rsqrt(ms + 1e-6) * g
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_epilogue_with_interior_escape_stays_unclaimed():
+    # the matmul feeds gelu AND escapes as a program output: the epilogue
+    # matcher must not claim a cone whose interior is observed outside
+    keys = jax.random.split(jax.random.PRNGKey(15), 2)
+    x = jax.random.normal(keys[0], (8, 8), jnp.float32)
+    w = jax.random.normal(keys[1], (8, 8), jnp.float32)
+
+    @repro.compile
+    def f(x, w):
+        h = ops.matmul(x, w)
+        return h, ops.gelu(h)
+
+    h_got, g_got = f(x, w)
+    assert "epilogue" not in _kinds(f.last_executable)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(x @ w),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(g_got),
+        np.asarray(jax.nn.gelu(x @ w, approximate=False)),
+        rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# provenance: cluster kinds in dump() / describe() / Session.describe()
+# --------------------------------------------------------------------------
+
+
+def test_dump_labels_cluster_kinds():
+    lb = LazyBackend()
+    with repro.session(backend=lb):
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = lb._lift(jax.random.normal(keys[0], (8, 4), jnp.float32))
+        k = lb._lift(jax.random.normal(keys[1], (8, 4), jnp.float32))
+        v = lb._lift(jax.random.normal(keys[2], (8, 4), jnp.float32))
+        out = _attn_program(q, k, v, mode="softmax", shifted=True,
+                            scale=0.5)
+        extra = ops.sum(ops.tanh(ops.add(out, out)), axis=-1,
+                        keepdims=True)
+        g, _ = trace([extra])
+    PassManager.from_policy(CompilerPolicy()).run(g)
+    text = g.dump()
+    assert "(attention)" in text
+    assert "(reduction)" in text
+
+
+def test_session_describe_records_cluster_kinds():
+    lb = LazyBackend()
+    with repro.session(backend=lb) as s:
+        x = lb._lift(jnp.ones((8, 8), jnp.float32))
+        w = lb._lift(jnp.full((8, 8), 0.1, jnp.float32))
+        ops.materialize(ops.gelu(ops.matmul(x, w)))
+        desc = s.describe()
+    last = desc["compiler"]["last_run"]
+    assert last["clusters"] == [
+        {"kind": "epilogue", "lowering": "pallas",
+         "n_ops": last["clusters"][0]["n_ops"]}]
