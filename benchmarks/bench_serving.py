@@ -1,5 +1,6 @@
 """Serving benchmark: staggered mixed-length arrivals through the
-ServeEngine, dense vs paged KV cache, per scheduler.
+ServeEngine, dense vs paged KV cache, per scheduler — plus a
+prefix-sharing section under a Poisson arrival trace.
 
 Measures, per scenario:
  * tokens/s (decode throughput over the whole trace),
@@ -11,8 +12,15 @@ Measures, per scenario:
  * preemptions and block-pool stats (paged scenarios),
  * full Session/ServingPolicy provenance via ``engine.describe()``.
 
+The sharing section drives N requests with a common 32-token system
+prompt (Poisson arrivals by default, ``--trace staggered`` for the
+legacy stream) through sharing-off vs sharing-on paged engines and a
+2-replica prefix-affinity router, reports prefill-tokens-saved and
+follower TTFT, and *asserts* the decoded tokens are identical.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--quick]
                        [--out serving.json] [--arch codeqwen1.5-7b]
+                       [--trace poisson|staggered]
 
 The JSON output is uploaded as a CI artifact (see .github/workflows)
 to start a serving-perf trajectory across PRs.
@@ -31,7 +39,7 @@ import repro
 from repro.configs.base import get_config
 from repro.models import build_model
 from repro.runtime import ServingPolicy
-from repro.serving import Request, ServeEngine
+from repro.serving import Request, Router, ServeEngine
 
 
 def make_workload(n_requests: int, max_new: int, seed: int = 0):
@@ -45,6 +53,36 @@ def make_workload(n_requests: int, max_new: int, seed: int = 0):
         reqs.append((arrival, Request(uid=uid, prompt=prompt,
                                       max_new_tokens=max_new,
                                       priority=int(rng.integers(0, 3)))))
+    return sorted(reqs, key=lambda ar: ar[0])
+
+
+def make_shared_workload(n_requests: int, max_new: int, *,
+                         shared_len: int = 32, trace: str = "poisson",
+                         rate: float = 0.5, seed: int = 7):
+    """N requests sharing a ``shared_len``-token system prompt.
+
+    Every prompt is the same system prefix plus a short unique tail, so
+    a prefix-sharing cache prefills the system prompt once and maps it
+    into every follower.  Arrivals are a Poisson process (exponential
+    inter-arrival gaps, ``rate`` requests per engine step) by default,
+    or the legacy staggered stream with ``trace="staggered"``.
+    """
+    rng = np.random.default_rng(seed)
+    system = [int(t) for t in rng.integers(1, 60, size=shared_len)]
+    if trace == "poisson":
+        gaps = rng.exponential(scale=1.0 / rate, size=n_requests)
+        arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    elif trace == "staggered":
+        arrivals = np.array([2 * uid for uid in range(n_requests)])
+    else:
+        raise ValueError(f"unknown trace {trace!r}")
+    reqs = []
+    for uid in range(n_requests):
+        tail = [int(t) for t in rng.integers(1, 60,
+                                             size=int(rng.integers(4, 9)))]
+        reqs.append((int(arrivals[uid]),
+                     Request(uid=uid, prompt=system + tail,
+                             max_new_tokens=max_new)))
     return sorted(reqs, key=lambda ar: ar[0])
 
 
@@ -63,17 +101,20 @@ def drive(engine: ServeEngine, workload, max_steps: int = 5000):
     return done, wall
 
 
+def _fresh(workload):
+    """Copy a workload so every scenario decodes the same requests."""
+    return [(a, Request(uid=r.uid, prompt=list(r.prompt),
+                        max_new_tokens=r.max_new_tokens,
+                        priority=r.priority))
+            for a, r in workload]
+
+
 def run_scenario(name: str, model, params, policy: ServingPolicy, *,
                  slots: int, max_seq: int, workload) -> dict:
     with repro.session(tag=f"bench_serving:{name}"):
         engine = ServeEngine(model, params, batch_slots=slots,
                              max_seq=max_seq, policy=policy)
-    # copy the workload so every scenario decodes the same requests
-    fresh = [(a, Request(uid=r.uid, prompt=list(r.prompt),
-                         max_new_tokens=r.max_new_tokens,
-                         priority=r.priority))
-             for a, r in workload]
-    done, wall = drive(engine, fresh)
+    done, wall = drive(engine, _fresh(workload))
     toks = sum(len(r.generated) for r in done)
     ttfts = [r.first_token_time - r.submit_time for r in done
              if r.first_token_time is not None]
@@ -98,6 +139,112 @@ def run_scenario(name: str, model, params, policy: ServingPolicy, *,
     return out
 
 
+def run_sharing_scenario(name: str, model, params, policy: ServingPolicy, *,
+                         slots: int, max_seq: int, workload,
+                         replicas: int = 1) -> tuple[dict, dict]:
+    """Drive the shared-prompt trace; return (stats, tokens-by-uid).
+
+    Tracks TTFT per request so the leader (first arrival, pays the full
+    system-prompt prefill) can be separated from the followers (whose
+    prefill the sharing cache shortens).  With ``replicas > 1`` the same
+    trace goes through a :class:`Router` instead of a single engine.
+    """
+    with repro.session(tag=f"bench_serving:{name}"):
+        engines = [ServeEngine(model, params, batch_slots=slots,
+                               max_seq=max_seq, policy=policy)
+                   for _ in range(replicas)]
+    fresh = _fresh(workload)
+    if replicas == 1:
+        done, wall = drive(engines[0], fresh)
+    else:
+        router = Router(engines)
+        pending = list(fresh)
+        done = []
+        t0 = time.time()
+        for step in range(5000):
+            while pending and pending[0][0] <= step:
+                router.submit(pending.pop(0)[1])
+            done.extend(router.step())
+            if not pending and not any(e.active or e.waiting
+                                       for e in engines):
+                break
+        wall = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    leader_uid = fresh[0][1].uid
+    ttft = {r.uid: r.first_token_time - r.submit_time for r in done
+            if r.first_token_time is not None}
+    follower = [t for uid, t in ttft.items() if uid != leader_uid]
+    saved = sum(e.prefill_tokens_saved for e in engines)
+    stats = {
+        "scenario": name,
+        "requests": len(done),
+        "replicas": replicas,
+        "tokens": toks,
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(toks / wall, 1) if wall > 0 else None,
+        "ttft_mean_s": (round(float(np.mean(list(ttft.values()))), 4)
+                        if ttft else None),
+        "ttft_follower_mean_s": (round(float(np.mean(follower)), 4)
+                                 if follower else None),
+        "prefill_calls": sum(e.prefill_calls for e in engines),
+        "prefill_tokens_saved": saved,
+        "shared_admissions": sum(e.shared_admissions for e in engines),
+        "preemptions": sum(e.preemptions for e in engines),
+        "provenance": engines[0].describe(),
+    }
+    return stats, {r.uid: list(r.generated) for r in done}
+
+
+def run_sharing_section(model, params, *, slots: int, max_seq: int,
+                        n_req: int, max_new: int, trace: str,
+                        chunk: int) -> dict:
+    """Sharing-off vs sharing-on vs routed, same shared-prompt trace.
+
+    Asserts the decoded tokens are identical across all three paths and
+    that sharing actually saved prefill work — the bench doubles as the
+    acceptance check for the prefix-sharing serving stack.
+    """
+    workload = make_shared_workload(n_req, max_new, trace=trace)
+    base = dict(cache="paged", scheduler="fifo", block_size=8,
+                prefill_chunk=chunk)
+    runs = [
+        ("shared-prompt-sharing-off", ServingPolicy(**base), 1),
+        ("shared-prompt-sharing-on",
+         ServingPolicy(**base, prefix=True), 1),
+        ("shared-prompt-router-2x",
+         ServingPolicy(**base, prefix=True, routing="prefix_affinity"), 2),
+    ]
+    results, tokens = [], {}
+    for name, policy, replicas in runs:
+        stats, gen = run_sharing_scenario(
+            name, model, params, policy, slots=slots, max_seq=max_seq,
+            workload=workload, replicas=replicas)
+        results.append(stats)
+        tokens[name] = gen
+        print(f"[{name:>28s}] {stats['tokens']:4d} tok at "
+              f"{stats['tok_per_s']:8.1f} tok/s | "
+              f"ttft {stats['ttft_mean_s']}s "
+              f"(followers {stats['ttft_follower_mean_s']}s) | "
+              f"prefill saved {stats['prefill_tokens_saved']} tok | "
+              f"shared admissions {stats['shared_admissions']}")
+    off, on, routed = results
+    gen_off = tokens["shared-prompt-sharing-off"]
+    for other in ("shared-prompt-sharing-on", "shared-prompt-router-2x"):
+        assert tokens[other] == gen_off, \
+            f"{other} decoded different tokens than sharing-off"
+    assert off["prefill_tokens_saved"] == 0
+    assert on["prefill_tokens_saved"] > 0, \
+        "sharing-on saved no prefill tokens on a shared-prompt trace"
+    assert routed["prefill_tokens_saved"] > 0
+    print(f"\nprefix sharing: {on['prefill_tokens_saved']} prefill tokens "
+          f"saved across {on['shared_admissions']} shared admissions; "
+          f"follower ttft {off['ttft_follower_mean_s']}s -> "
+          f"{on['ttft_follower_mean_s']}s; decoded tokens identical "
+          "across sharing-off / sharing-on / routed")
+    return {"trace": trace, "shared_prompt_tokens": 32,
+            "requests": n_req, "results": results}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -108,6 +255,9 @@ def main():
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--trace", default="poisson",
+                    choices=("poisson", "staggered"),
+                    help="arrival process for the sharing section")
     args = ap.parse_args()
 
     overrides = {}
@@ -160,9 +310,15 @@ def main():
           f"({legacy['prefill_calls'] / max(1, chunked['prefill_calls']):.1f}"
           f"x fewer compiled-call dispatches per admission stream)")
 
+    print()
+    sharing = run_sharing_section(model, params, slots=args.slots,
+                                  max_seq=args.max_seq, n_req=8,
+                                  max_new=max_new, trace=args.trace,
+                                  chunk=chunk)
+
     payload = {"arch": cfg.name, "quick": args.quick, "slots": args.slots,
                "max_seq": args.max_seq, "prefill_chunk": chunk,
-               "results": results}
+               "results": results, "sharing": sharing}
     blob = json.dumps(payload, indent=2, default=str)
     if args.out:
         with open(args.out, "w") as f:

@@ -1,0 +1,79 @@
+"""Multi-replica serving example: the serve() stream front door over two
+engine replicas with prefix-affinity routing and a prefix-sharing paged
+KV cache — requests with a shared system prompt arrive over time, land
+on the replica that already cached their prefix, and skip its prefill.
+
+Run:  PYTHONPATH=src python examples/serve_router.py
+"""
+
+import time
+
+import jax
+
+import repro
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.runtime import ServingPolicy
+from repro.serving import Request, Router, ServeEngine, timed_stream
+
+# a shared "system prompt" every request starts with, plus unique tails —
+# the shape of real chat serving, and the case prefix sharing targets
+SYSTEM = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7, 9, 3]
+TAILS = [[23, 8], [46, 2, 6], [43, 38, 32], [7, 9, 50],
+         [28, 8, 41, 9], [16, 39, 9], [37, 51], [5, 8, 20, 9]]
+
+
+def _requests():
+    return [Request(uid=uid, prompt=SYSTEM + tail, max_new_tokens=10)
+            for uid, tail in enumerate(TAILS)]
+
+
+def main():
+    # codeqwen has no sliding-window layers, so it supports prefix
+    # sharing end to end (window models degrade silently to no sharing)
+    cfg = get_config("codeqwen1.5-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = ServingPolicy(cache="paged", block_size=8, prefill_chunk=8,
+                           prefix=True, routing="prefix_affinity")
+
+    # reference: every request through one engine, submitted up front
+    with repro.session(tag="serve_router:single"):
+        single = ServeEngine(model, params, batch_slots=4, max_seq=64,
+                             policy=policy)
+    for req in _requests():
+        single.submit(req)
+    ref = {r.uid: r.generated for r in single.run_until_done()}
+
+    # routed: the same requests arrive over time (2 per tick) as a
+    # stream through serve() across two replicas
+    with repro.session(tag="serve_router:routed"):
+        router = Router([ServeEngine(model, params, batch_slots=4,
+                                     max_seq=64, policy=policy)
+                         for _ in range(2)])
+    trace = [(uid // 2, req) for uid, req in enumerate(_requests())]
+    t0 = time.time()
+    done = list(router.serve(timed_stream(trace)))
+    dt = time.time() - t0
+    out = {r.uid: r.generated for r in done}
+
+    toks = sum(len(g) for g in out.values())
+    desc = router.describe()
+    saved = sum(e.prefill_tokens_saved for e in router.engines)
+    print(f"[serve_router] {len(done)} requests, {toks} tokens in "
+          f"{dt:.2f}s across {desc['replicas']} replicas "
+          f"({desc['routing']} routing, {desc['steps']} lockstep steps)")
+    print(f"[serve_router] placement: {desc['placement']} | "
+          f"prefill tokens saved by sharing: {saved}")
+    print(f"[serve_router] replica 0 serving provenance: "
+          f"{desc['engines'][0]['session']['serving']}")
+
+    # routed multi-replica decoding is token-for-token identical to the
+    # single engine, and the shared system prompt actually saved prefill
+    assert out == ref, "routed/single-engine divergence!"
+    assert saved > 0, "prefix sharing saved no prefill tokens"
+    print("serve_router OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,12 +8,12 @@ Top-level API: the unified runtime Session —
 """
 
 from repro.runtime import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
-                           PrecisionPolicy, ServingPolicy, Session,
-                           current_session, default_session, session)
+                           PrecisionPolicy, PrefixPolicy, ServingPolicy,
+                           Session, current_session, default_session, session)
 
 __all__ = [
     "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
-    "CompilerPolicy", "AnalysisPolicy",
+    "PrefixPolicy", "CompilerPolicy", "AnalysisPolicy",
     "session", "current_session", "default_session",
     "compile",
 ]

@@ -274,13 +274,21 @@ def _tile_oversize() -> DiagnosticReport:
 
 
 def _snap(table: Any, held: dict[int, list[int]], live: set[int],
-          num_blocks: int = 8) -> "CacheSnapshot":
+          num_blocks: int = 8,
+          refcounts: dict[int, int] | None = None,
+          shared_len: dict[int, int] | None = None,
+          prepared: dict[int, tuple[int, int]] | None = None,
+          prefix_blocks: set[int] | None = None) -> "CacheSnapshot":
     from .serving import CacheSnapshot
 
     return CacheSnapshot(num_blocks=num_blocks, block_size=4,
                          block_bytes=1024, table=np.asarray(table, np.int32),
                          held={s: tuple(b) for s, b in held.items()},
-                         live_blocks=frozenset(live), manager="seeded")
+                         live_blocks=frozenset(live), manager="seeded",
+                         refcounts=refcounts,
+                         shared_len=shared_len or {},
+                         prepared=prepared or {},
+                         prefix_blocks=frozenset(prefix_blocks or ()))
 
 
 def _kv_check(snap: "CacheSnapshot") -> DiagnosticReport:
@@ -317,6 +325,32 @@ def _kv_table_stale() -> DiagnosticReport:
     # release() forgot to zero the table row past the held prefix
     return _kv_check(_snap([[1, 5, 0], [0, 0, 0]],
                            {0: [1]}, live={0, 1}))
+
+
+def _kv_refcount_underflow() -> DiagnosticReport:
+    # two slots share block 1 through the prefix index, but a buggy
+    # release already decremented it to 1 — the next release frees it
+    # while slot 1 still reads through it
+    return _kv_check(_snap([[1, 2, 0], [1, 0, 0]],
+                           {0: [1, 2], 1: [1]}, live={0, 1, 2},
+                           refcounts={1: 1, 2: 1}))
+
+
+def _kv_shared_write() -> DiagnosticReport:
+    # slot 1 shares block 1 (refcount 2) up to position 2 but prepared a
+    # divergent write at position 3 without copy-on-write
+    return _kv_check(_snap([[1, 2, 0], [1, 0, 0]],
+                           {0: [1, 2], 1: [1]}, live={0, 1, 2},
+                           refcounts={1: 2, 2: 1},
+                           shared_len={0: 8, 1: 2}, prepared={1: (3, 3)}))
+
+
+def _kv_prefix_stale() -> DiagnosticReport:
+    # the radix tree still advertises block 3 after the allocator freed
+    # it — the next match maps recycled memory into a fresh request
+    return _kv_check(_snap([[1, 0, 0]],
+                           {0: [1]}, live={0, 1},
+                           refcounts={1: 1}, prefix_blocks={3}))
 
 
 # -- numerics -----------------------------------------------------------------
@@ -406,6 +440,15 @@ MUTATIONS: tuple[Mutation, ...] = (
     Mutation("kv_table_stale", "kv.table-stale",
              "release() left a nonzero table entry past the held prefix",
              _kv_table_stale),
+    Mutation("kv_refcount_underflow", "kv.refcount-underflow",
+             "a shared block's refcount fell below its reference count",
+             _kv_refcount_underflow),
+    Mutation("kv_shared_write", "kv.shared-write",
+             "a divergent write prepared into a shared block without COW",
+             _kv_shared_write),
+    Mutation("kv_prefix_stale", "kv.prefix-stale",
+             "the radix tree advertises a block the allocator freed",
+             _kv_prefix_stale),
     Mutation("bf16_accum", "numerics.bf16-accum",
              "a long reduction accumulating in bfloat16",
              _bf16_accum),

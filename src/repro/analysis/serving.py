@@ -24,6 +24,23 @@ out next).  :func:`check_paged_cache` cross-checks a
                        list (wrong id, or a nonzero entry past the held
                        prefix — reads beyond the slot's length would hit
                        a block it no longer owns).
+
+Prefix sharing (``serving/prefix.py``) adds a fourth view — per-block
+refcounts plus the radix tree's block set — and three rules over it.
+They only engage when ``snap.refcounts`` is present; legacy snapshots
+keep the exclusive-ownership semantics above.
+
+``kv.refcount-underflow``  a block has fewer recorded references than
+                           things referencing it (slot mappings + tree)
+                           — one release away from freeing memory that
+                           is still read through a live table.
+``kv.shared-write``        a slot prepared a write at/past its shared
+                           prefix into a block other sharers still
+                           reference, without copy-on-write — the write
+                           corrupts every sharer's cache.
+``kv.prefix-stale``        the radix tree advertises a block the
+                           allocator freed — the next match maps
+                           recycled memory into a fresh request.
 """
 
 from __future__ import annotations
@@ -50,6 +67,11 @@ class CacheSnapshot:
     held: Mapping[int, tuple[int, ...]] = field(default_factory=dict)
     live_blocks: frozenset[int] = frozenset()    # allocator's live view
     manager: str = ""
+    # prefix-sharing views (None/empty = legacy exclusive-ownership cache)
+    refcounts: Mapping[int, int] | None = None   # block -> reference count
+    shared_len: Mapping[int, int] = field(default_factory=dict)
+    prepared: Mapping[int, tuple[int, int]] = field(default_factory=dict)
+    prefix_blocks: frozenset[int] = frozenset()  # radix tree's block set
 
     def to_json(self) -> dict[str, Any]:
         return {"num_blocks": self.num_blocks,
@@ -58,7 +80,16 @@ class CacheSnapshot:
                 "held": {int(s): [int(b) for b in bs]
                          for s, bs in self.held.items()},
                 "live_blocks": sorted(int(b) for b in self.live_blocks),
-                "manager": self.manager}
+                "manager": self.manager,
+                "refcounts": (None if self.refcounts is None else
+                              {int(b): int(c)
+                               for b, c in self.refcounts.items()}),
+                "shared_len": {int(s): int(v)
+                               for s, v in self.shared_len.items()},
+                "prepared": {int(s): [int(v[0]), int(v[1])]
+                             for s, v in self.prepared.items()},
+                "prefix_blocks": sorted(int(b)
+                                        for b in self.prefix_blocks)}
 
 
 def _live_offsets(manager: Any) -> Sequence[int]:
@@ -84,12 +115,19 @@ def snapshot_cache(cache: "PagedKVCache") -> CacheSnapshot:
                      for off in _live_offsets(cache.manager))
     held = {slot: tuple(bid for bid, _ptr in blocks)
             for slot, blocks in cache._blocks.items()}
+    index = getattr(cache, "prefix_index", None)
     return CacheSnapshot(num_blocks=cache.num_blocks,
                          block_size=cache.block_size,
                          block_bytes=cache.block_bytes,
                          table=np.array(cache.table, copy=True),
                          held=held, live_blocks=live,
-                         manager=type(cache.manager).__name__)
+                         manager=type(cache.manager).__name__,
+                         refcounts=dict(getattr(cache, "refcount", None)
+                                        or {}) or None,
+                         shared_len=dict(getattr(cache, "_shared_len", {})),
+                         prepared=dict(getattr(cache, "_prepared", {})),
+                         prefix_blocks=(index.blocks() if index is not None
+                                        else frozenset()))
 
 
 def check_paged_cache(snap: CacheSnapshot,
@@ -97,9 +135,12 @@ def check_paged_cache(snap: CacheSnapshot,
     """Audit one snapshot; every rule above is a pure function of it."""
     report = DiagnosticReport()
     table = np.asarray(snap.table)
-    owner: dict[int, int] = {}
+    rc = snap.refcounts
+    owner: dict[int, int] = {}                   # first mapper (legacy rule)
+    refs: dict[int, int] = {}                    # block -> slot mappings
     for slot, blocks in sorted(snap.held.items()):
         n = len(blocks)
+        seen: set[int] = set()
         for i, bid in enumerate(blocks):
             if bid == 0:
                 report.add("kv.trash-block", Severity.ERROR,
@@ -114,13 +155,30 @@ def check_paged_cache(snap: CacheSnapshot,
                            f"(pool has {snap.num_blocks})",
                            where=where or f"slot {slot}")
                 continue
-            if bid in owner:
-                report.add("kv.double-map", Severity.ERROR,
-                           f"block {bid} mapped by slot {owner[bid]} and "
-                           f"slot {slot} — decode writes from one corrupt "
-                           "the other's cache", where=where or f"slot {slot}")
+            refs[bid] = refs.get(bid, 0) + 1
+            if rc is None:
+                # exclusive ownership: any second mapping is corruption
+                if bid in owner:
+                    report.add("kv.double-map", Severity.ERROR,
+                               f"block {bid} mapped by slot {owner[bid]} "
+                               f"and slot {slot} — decode writes from one "
+                               "corrupt the other's cache",
+                               where=where or f"slot {slot}")
+                else:
+                    owner[bid] = slot
             else:
-                owner[bid] = slot
+                # refcounted sharing: cross-slot mappings are legal (the
+                # refcount rule below checks they are accounted for),
+                # but one slot aliasing a block at two logical indices
+                # is still corruption
+                owner.setdefault(bid, slot)
+                if bid in seen:
+                    report.add("kv.double-map", Severity.ERROR,
+                               f"slot {slot} maps block {bid} at two "
+                               "logical indices — two cache positions "
+                               "alias the same physical rows",
+                               where=where or f"slot {slot}")
+                seen.add(bid)
             if snap.live_blocks and bid not in snap.live_blocks:
                 report.add("kv.double-free", Severity.ERROR,
                            f"block {bid} is mapped by slot {slot} but free "
@@ -152,14 +210,69 @@ def check_paged_cache(snap: CacheSnapshot,
                        f"idle slot {slot} table still maps block "
                        f"{int(table[slot][nz[0]])} at index {int(nz[0])}",
                        where=where or f"slot {slot}")
+    # -- prefix-sharing rules (refcounted snapshots only) --------------------
+    stale: set[int] = set()
+    if rc is not None:
+        if 0 in snap.prefix_blocks:
+            report.add("kv.trash-block", Severity.ERROR,
+                       "the radix tree advertises physical block 0 (the "
+                       "reserved trash block) as cached prefix content",
+                       where=where)
+        if snap.live_blocks:
+            for bid in sorted(snap.prefix_blocks - {0}):
+                if bid not in snap.live_blocks:
+                    stale.add(bid)
+                    report.add("kv.prefix-stale", Severity.ERROR,
+                               f"the radix tree advertises block {bid} but "
+                               "the allocator freed it — the next prefix "
+                               "match maps recycled memory into a fresh "
+                               "request", where=where)
+        for bid in sorted(set(refs) | (snap.prefix_blocks - {0})):
+            if bid in stale:
+                continue                 # already fatal; don't double-report
+            expect = refs.get(bid, 0) + (1 if bid in snap.prefix_blocks
+                                         else 0)
+            have = int(rc.get(bid, 0))
+            if have < expect:
+                report.add("kv.refcount-underflow", Severity.ERROR,
+                           f"block {bid} has refcount {have} but "
+                           f"{expect} references (slot mappings"
+                           f"{' + radix tree' if bid in snap.prefix_blocks else ''})"
+                           " — one release away from freeing memory still "
+                           "read through a live table", where=where)
+            elif have > expect:
+                report.add("kv.leak", Severity.ERROR,
+                           f"block {bid} has refcount {have} but only "
+                           f"{expect} references — the excess can never "
+                           "be released, leaking capacity", where=where)
+        bs = snap.block_size
+        for slot, (lo, hi) in sorted(snap.prepared.items()):
+            sh = int(snap.shared_len.get(slot, 0))
+            blocks = snap.held.get(slot, ())
+            if hi < sh or not blocks:
+                continue                 # idempotent rewrite of the prefix
+            for j in range(max(int(lo), sh) // bs,
+                           min(int(hi) // bs, len(blocks) - 1) + 1):
+                bid = blocks[j]
+                if int(rc.get(bid, 0)) > 1:
+                    report.add("kv.shared-write", Severity.ERROR,
+                               f"slot {slot} prepared a divergent write "
+                               f"(range [{lo}, {hi}], shared prefix {sh}) "
+                               f"into block {bid} which "
+                               f"{int(rc.get(bid, 0)) - 1} other sharer(s) "
+                               "still reference — no copy-on-write "
+                               "happened", where=where)
     if snap.live_blocks:
         if 0 not in snap.live_blocks:
             report.add("kv.trash-block", Severity.ERROR,
                        "the allocator freed physical block 0 — the trash "
                        "block must stay reserved for idle-slot writes",
                        where=where)
-        for bid in sorted(snap.live_blocks - {0} - set(owner)):
+        keep = set(owner) | (snap.prefix_blocks if rc is not None
+                             else frozenset())
+        for bid in sorted(snap.live_blocks - {0} - keep):
             report.add("kv.leak", Severity.ERROR,
                        f"block {bid} is live in the allocator but mapped "
-                       "by no slot — leaked capacity", where=where)
+                       "by no slot and cached by no prefix — leaked "
+                       "capacity", where=where)
     return report

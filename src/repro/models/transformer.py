@@ -177,6 +177,15 @@ class LM:
     def supports_chunked_prefill(self) -> bool:
         return not self.has_recurrent_state() and self.cfg.attention != "mla"
 
+    def supports_prefix_sharing(self) -> bool:
+        """Prefix sharing skips prefill for cached positions, which only
+        works when *every* layer's cache is position-addressed through
+        the paged pool — sliding-window layers keep per-slot dense ring
+        buffers that a skipped prefill would leave unfilled."""
+        return self.supports_paged_cache() and all(
+            self.cfg.window_for_layer(i) == 0
+            for i in range(self.cfg.n_layers))
+
     def prefill_step(self, p, cache, tokens, start, count, *,
                      block_table=None):
         """Chunked batched prefill: one jitted call consumes a [B, T]

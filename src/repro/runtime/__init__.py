@@ -12,13 +12,15 @@ kernel overrides, precision policy, and memory manager.
 """
 
 from .policies import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
-                       PrecisionPolicy, ServingPolicy, resolve_dtype)
+                       PrecisionPolicy, PrefixPolicy, ServingPolicy,
+                       resolve_dtype)
 from .session import Session
 from .stack import (current_session, default_session, mutate_current,
                     pop_session, push_session, session)
 
 __all__ = [
     "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
+    "PrefixPolicy",
     "CompilerPolicy", "AnalysisPolicy", "resolve_dtype",
     "session", "current_session", "default_session",
     "push_session", "pop_session", "mutate_current",

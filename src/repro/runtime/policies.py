@@ -77,6 +77,44 @@ class PrecisionPolicy:
 
 
 @dataclass(frozen=True)
+class PrefixPolicy:
+    """Prefix-sharing knobs for the paged KV cache (see
+    ``serving/prefix.py``).
+
+    enabled:
+        content-addressed block sharing: admissions whose prompts share
+        a prefix map their leading block-table entries onto existing
+        pool blocks (refcounted, copy-on-write on the first divergent
+        write) instead of re-allocating and re-prefilling.  Off by
+        default — sharing is an opt-in scenario like every other
+        policy.  Requires chunked prefill and a model without
+        sliding-window layers (ring caches are per-slot dense and
+        cannot skip prefill); unsupported models silently degrade to
+        no sharing.
+    retain:
+        keep a finished request's registered blocks in the radix tree
+        (tree-referenced, reclaimed LRU under pool pressure) so *later*
+        requests can hit them.  ``False`` shares only among
+        concurrently active requests.
+    partial:
+        allow the match to end in one partially-overlapping block
+        (copy-on-write at the first divergent token); ``False``
+        restricts sharing to whole-block matches.
+    """
+
+    enabled: bool = False
+    retain: bool = True
+    partial: bool = True
+
+    def replace(self, **kw) -> "PrefixPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> dict:
+        return {"enabled": self.enabled, "retain": self.retain,
+                "partial": self.partial}
+
+
+@dataclass(frozen=True)
 class ServingPolicy:
     """Serving-scenario knobs carried by a :class:`Session`.
 
@@ -101,6 +139,17 @@ class ServingPolicy:
         prompt tokens consumed per jitted prefill call (chunked batched
         prefill); ``0`` falls back to the legacy one-decode-per-token
         admission path.
+    prefix:
+        :class:`PrefixPolicy` — content-addressed prefix sharing across
+        requests in the paged cache.  Accepts a ``PrefixPolicy``, a
+        kwargs dict, or a bare bool (``True`` = defaults with sharing
+        on).
+    routing:
+        multi-replica routing policy for ``serving.Router`` /
+        ``serving.serve()`` — a registry name (``"round_robin"``,
+        ``"least_loaded"``, ``"prefix_affinity"``; see
+        ``serving/router.py``) or a ``RoutingPolicy`` instance.
+        Single-engine serving ignores it.
     """
 
     cache: str = "dense"
@@ -109,6 +158,16 @@ class ServingPolicy:
     scheduler: Any = "fifo"
     allocator: str = "caching"
     prefill_chunk: int = 16
+    prefix: PrefixPolicy = PrefixPolicy()
+    routing: Any = "round_robin"
+
+    def __post_init__(self):
+        pfx = self.prefix
+        if isinstance(pfx, bool):
+            pfx = PrefixPolicy(enabled=pfx)
+        elif isinstance(pfx, dict):
+            pfx = PrefixPolicy(**pfx)
+        object.__setattr__(self, "prefix", pfx)
 
     def replace(self, **kw) -> "ServingPolicy":
         return dataclasses.replace(self, **kw)
@@ -117,10 +176,15 @@ class ServingPolicy:
         sched = self.scheduler
         if not isinstance(sched, str):
             sched = getattr(sched, "name", None) or type(sched).__name__
+        routing = self.routing
+        if not isinstance(routing, str):
+            routing = getattr(routing, "name", None) or type(routing).__name__
         return {"cache": self.cache, "block_size": self.block_size,
                 "num_blocks": self.num_blocks, "scheduler": sched,
                 "allocator": self.allocator,
-                "prefill_chunk": self.prefill_chunk}
+                "prefill_chunk": self.prefill_chunk,
+                "prefix": self.prefix.describe(),
+                "routing": routing}
 
 
 @dataclass(frozen=True)

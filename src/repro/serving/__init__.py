@@ -1,10 +1,17 @@
 from .decode_attention import make_flash_decode_attend
 from .engine import Request, ServeEngine
 from .kv_cache import BlockTable, OutOfMemory, PagedKVCache
+from .prefix import PrefixIndex, PrefixNode
+from .router import (LeastLoadedRouting, PrefixAffinityRouting,
+                     RoundRobinRouting, Router, RoutingPolicy, make_routing,
+                     serve, timed_stream)
 from .scheduler import (FifoScheduler, PriorityScheduler, Scheduler,
                         ShortestPromptScheduler, make_scheduler)
 
 __all__ = ["make_flash_decode_attend", "Request", "ServeEngine",
            "BlockTable", "PagedKVCache", "OutOfMemory", "Scheduler",
            "FifoScheduler", "ShortestPromptScheduler", "PriorityScheduler",
-           "make_scheduler"]
+           "make_scheduler", "PrefixIndex", "PrefixNode",
+           "RoutingPolicy", "RoundRobinRouting", "LeastLoadedRouting",
+           "PrefixAffinityRouting", "make_routing", "Router", "serve",
+           "timed_stream"]

@@ -106,12 +106,24 @@ class ServeEngine:
                     "this model does not support the paged KV cache "
                     "(MLA latent caches are dense-only for now); use "
                     "ServingPolicy(cache='dense')")
+            # prefix sharing needs chunked prefill (the skip is
+            # chunk-aligned) and a model with no window layers; anything
+            # else silently degrades to private blocks (shared_len=0)
+            # so the policy stays safe to enable globally.
+            self.prefix_on = (
+                self.policy.prefix.enabled
+                and self.policy.prefill_chunk > 0
+                and getattr(model, "supports_prefix_sharing",
+                            lambda: False)())
             self.kv = PagedKVCache(model, slots=batch_slots, max_seq=max_seq,
                                    block_size=self.policy.block_size,
                                    num_blocks=self.policy.num_blocks,
-                                   manager=self.policy.allocator)
+                                   manager=self.policy.allocator,
+                                   prefix=(self.policy.prefix
+                                           if self.prefix_on else None))
             self.cache = self.kv.pools
         else:
+            self.prefix_on = False
             self.kv = None
             self.cache = model.init_cache(batch_slots, max_seq)
 
@@ -127,6 +139,8 @@ class ServeEngine:
         self.decode_calls = 0
         self.prefill_calls = 0
         self.preemptions = 0
+        self.prefill_tokens_saved = 0
+        self.shared_admissions = 0
         self._admit_counter = 0
 
     # -- jitted bodies -------------------------------------------------------
@@ -189,6 +203,7 @@ class ServeEngine:
                     f"request {req.uid} prompt ({len(eff)} tokens) does "
                     f"not fit max_seq={self.max_seq}; requeueing would "
                     "spin forever")
+            shared = 0
             if self.paged:
                 if self.kv.blocks_for(len(eff) - 1) > self.kv.usable_blocks:
                     raise OutOfMemory(
@@ -196,7 +211,24 @@ class ServeEngine:
                         f"whole pool holds ({self.kv.usable_blocks} usable "
                         f"blocks of {self.kv.block_size} positions)")
                 try:
+                    if self.prefix_on:
+                        # map the longest cached prefix, then grow the
+                        # private tail behind it
+                        shared = self.kv.admit(slot, eff)
                     self.kv.ensure(slot, len(eff) - 1)
+                    if self.prefix_on:
+                        n = len(eff) - 1
+                        if shared < n:
+                            # the prefill round will write [c0, n); COW
+                            # any still-shared block it diverges into
+                            # *before* the tokens land
+                            t = self.policy.prefill_chunk
+                            c0 = (shared // t) * t
+                            self.cache = self.kv.prepare_write(
+                                slot, c0, n - 1, self.cache)
+                        # publish this prompt's full blocks for later
+                        # admissions (ready after the prefill round)
+                        self.kv.register(slot, eff[:n])
                 except OutOfMemory:
                     # pool dry: roll back any partial allocation and wait
                     # for active slots to finish (or get evicted later)
@@ -204,40 +236,69 @@ class ServeEngine:
                     self._audit_kv()
                     self.scheduler.requeue(req)
                     break
+                if shared:
+                    self.shared_admissions += 1
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
             self.active[slot] = req
             self.slot_pos[slot] = len(eff) - 1
             self.slot_tok[slot, 0] = eff[-1]
-            admitted.append((slot, req, eff))
+            admitted.append((slot, req, eff, shared))
         if admitted:
             if self._chunked:
                 self._prefill_chunked(admitted)
             else:
-                for slot, _req, eff in admitted:
+                for slot, _req, eff, _shared in admitted:
                     self._prefill_per_token(slot, eff)
 
     def _prefill_chunked(self, admitted) -> None:
         """All newly admitted slots prefill together, one jitted call per
-        chunk: ceil(max_prompt_len / chunk) calls per admission round."""
+        chunk: ceil(max_prompt_len / chunk) calls per admission round.
+
+        With prefix sharing, a slot whose leading ``shared`` positions
+        came out of the radix tree starts at the chunk boundary below
+        the match (``c0``) — recomputing the partial-chunk tail [c0,
+        shared) keeps the chunk grid, and therefore the numerics,
+        bit-identical to the sharing-off path (the rewrites are
+        idempotent: identical values at identical positions).  A slot
+        whose whole prompt is cached skips prefill entirely.
+        """
         t = self.policy.prefill_chunk
-        longest = max(len(eff) - 1 for _s, _r, eff in admitted)
-        bt = self._block_table()
-        for c in range(0, longest, t):
-            toks = np.zeros((self.slots, t), np.int32)
-            start = np.zeros(self.slots, np.int32)
-            count = np.zeros(self.slots, np.int32)
-            for slot, _req, eff in admitted:
-                seg = eff[:-1][c:c + t]
-                if not seg:
-                    continue
-                toks[slot, :len(seg)] = seg
-                start[slot] = c
-                count[slot] = len(seg)
-            self.cache = self._prefill(self.params, self.cache,
-                                       jnp.asarray(toks), jnp.asarray(start),
-                                       jnp.asarray(count), bt)
-            self.prefill_calls += 1
+        plan = []                            # (slot, eff, c0)
+        for slot, _req, eff, shared in admitted:
+            n = len(eff) - 1
+            if self.prefix_on and shared >= n:
+                self.prefill_tokens_saved += n
+                continue
+            c0 = (min(shared, n) // t) * t if self.prefix_on else 0
+            self.prefill_tokens_saved += c0
+            plan.append((slot, eff, c0))
+        if plan:
+            longest = max(len(eff) - 1 for _s, eff, _c in plan)
+            first = min(c0 for _s, _e, c0 in plan)
+            bt = self._block_table()
+            for c in range(first, longest, t):
+                toks = np.zeros((self.slots, t), np.int32)
+                start = np.zeros(self.slots, np.int32)
+                count = np.zeros(self.slots, np.int32)
+                for slot, eff, c0 in plan:
+                    if c < c0:
+                        continue
+                    seg = eff[:-1][c:c + t]
+                    if not seg:
+                        continue
+                    toks[slot, :len(seg)] = seg
+                    start[slot] = c
+                    count[slot] = len(seg)
+                self.cache = self._prefill(self.params, self.cache,
+                                           jnp.asarray(toks),
+                                           jnp.asarray(start),
+                                           jnp.asarray(count), bt)
+                self.prefill_calls += 1
+        if self.prefix_on:
+            # device content for this round's registrations now exists
+            for slot, _req, _eff, _shared in admitted:
+                self.kv.mark_ready(slot)
 
     def _prefill_per_token(self, slot: int, eff: list[int]) -> None:
         # Legacy fallback (MLA / prefill_chunk=0): feed prompt tokens
@@ -286,7 +347,14 @@ class ServeEngine:
         for slot in sorted(self.active):
             while slot in self.active:
                 try:
-                    self.kv.ensure(slot, int(self.slot_pos[slot]))
+                    p = int(self.slot_pos[slot])
+                    self.kv.ensure(slot, p)
+                    if self.prefix_on:
+                        # decode is about to write position p: give the
+                        # slot a private copy of a still-shared block
+                        # before the first divergent token lands
+                        self.cache = self.kv.prepare_write(
+                            slot, p, p, self.cache)
                     break
                 except OutOfMemory:
                     others = {s: r for s, r in self.active.items()
@@ -350,7 +418,10 @@ class ServeEngine:
              "chunked_prefill": self._chunked,
              "decode_calls": self.decode_calls,
              "prefill_calls": self.prefill_calls,
-             "preemptions": self.preemptions}
+             "preemptions": self.preemptions,
+             "prefix_sharing": self.prefix_on,
+             "prefill_tokens_saved": self.prefill_tokens_saved,
+             "shared_admissions": self.shared_admissions}
         if self.paged:
             d["kv_cache"] = self.kv.describe()
         return d

@@ -35,6 +35,8 @@ from repro.core.memory.manager import (BumpMemoryManager,
                                        CachingMemoryManager,
                                        MemoryManagerAdapter, OutOfMemory)
 
+from .prefix import PrefixIndex, PrefixNode
+
 __all__ = ["BlockTable", "PagedKVCache", "OutOfMemory", "paged_block_bytes"]
 
 
@@ -85,9 +87,11 @@ class PagedKVCache:
 
     def __init__(self, model, *, slots: int, max_seq: int, block_size: int,
                  num_blocks: int | None = None,
-                 manager: MemoryManagerAdapter | str | None = None):
+                 manager: MemoryManagerAdapter | str | None = None,
+                 prefix=None):
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
+        self.model = model
         self.slots = slots
         self.max_seq = max_seq
         self.block_size = block_size
@@ -111,6 +115,22 @@ class PagedKVCache:
                                             block_size=block_size)
         self.table = np.zeros((slots, self.max_blocks), np.int32)
         self._blocks: dict[int, list[tuple[int, int]]] = {}  # slot -> [(id, ptr)]
+        # -- prefix sharing (optional) ---------------------------------------
+        # refcount[bid] = slot mappings + (1 if the radix tree holds it);
+        # blocks return to the allocator only when the last sharer lets go.
+        self.prefix = prefix                      # PrefixPolicy | None
+        self.prefix_index = (PrefixIndex(block_size)
+                             if prefix is not None else None)
+        self.refcount: dict[int, int] = {}
+        self._shared_len: dict[int, int] = {}     # slot -> matched positions
+        # slot -> (lo, hi) of the most recent prepared write range; the
+        # audit re-checks exactly this range against the refcounts (a
+        # *past* write into a block that became shared afterwards — the
+        # registrant's own prefill — is fine)
+        self._prepared: dict[int, tuple[int, int]] = {}
+        self._pending: dict[int, list[PrefixNode]] = {}  # pre-ready nodes
+        self._leaf_axes_cache: list[int | None] | None = None
+        self.cow_copies = 0
         # reserve physical block 0 as the trash block, never freed
         ptr0 = self.manager.alloc(self.block_bytes)
         if ptr0 // self.block_bytes != 0:
@@ -133,6 +153,40 @@ class PagedKVCache:
         """Blocks a slot needs so position ``pos`` is writable."""
         return pos // self.block_size + 1
 
+    # -- refcounted allocation ----------------------------------------------
+    def _alloc_block(self) -> tuple[int, int]:
+        """One fresh block (refcount 1); under pool pressure, reclaim
+        LRU tree-only prefix blocks before giving up with OutOfMemory."""
+        while True:
+            try:
+                ptr = self.manager.alloc(self.block_bytes)
+                break
+            except OutOfMemory:
+                if not self._evict_prefix(1):
+                    raise
+        bid = ptr // self.block_bytes
+        self.refcount[bid] = 1
+        return bid, ptr
+
+    def _decref(self, bid: int) -> None:
+        c = self.refcount.get(bid, 0) - 1
+        if c > 0:
+            self.refcount[bid] = c
+        else:
+            self.refcount.pop(bid, None)
+            self.manager.unlock(bid * self.block_bytes)
+
+    def _evict_prefix(self, n: int) -> bool:
+        """Drop up to ``n`` LRU radix leaves nobody maps (refcount 1 =
+        tree-only) and return their blocks to the allocator."""
+        if self.prefix_index is None:
+            return False
+        freed = self.prefix_index.evict(
+            lambda b: self.refcount.get(b, 0) == 1, limit=n)
+        for bid in freed:
+            self._decref(bid)
+        return bool(freed)
+
     # -- slot lifecycle ------------------------------------------------------
     def ensure(self, slot: int, pos: int) -> None:
         """Map enough blocks that ``pos`` is writable for ``slot``.
@@ -147,16 +201,178 @@ class PagedKVCache:
                 f"({self.max_blocks} blocks/slot)")
         held = self._blocks.setdefault(slot, [])
         while len(held) < need:
-            ptr = self.manager.alloc(self.block_bytes)
-            bid = ptr // self.block_bytes
+            bid, ptr = self._alloc_block()
             self.table[slot, len(held)] = bid
             held.append((bid, ptr))
 
     def release(self, slot: int) -> None:
-        """Free every block a slot holds (request finished or evicted)."""
-        for _bid, ptr in self._blocks.pop(slot, []):
-            self.manager.unlock(ptr)
+        """Drop every reference a slot holds (finished or evicted).
+
+        Shared blocks only decref — the block stays live for its other
+        sharers (tree included) and reaches the allocator when the last
+        one lets go.  Registrations that never became ready (the owner
+        was evicted before its prefill round completed) are unlinked so
+        no future admission can match garbage content.
+        """
+        for node in reversed(self._pending.pop(slot, [])):
+            if node.parent is not None and not node.children:
+                self.prefix_index.remove(node)
+                self._decref(node.block)
+        for bid, _ptr in self._blocks.pop(slot, []):
+            self._decref(bid)
         self.table[slot] = 0
+        self._shared_len.pop(slot, None)
+        self._prepared.pop(slot, None)
+        if self.prefix_index is not None and not self.prefix.retain:
+            for bid in self.prefix_index.sweep(
+                    lambda b: self.refcount.get(b, 0) == 1):
+                self._decref(bid)
+
+    # -- prefix sharing ------------------------------------------------------
+    def admit(self, slot: int, tokens: list[int]) -> int:
+        """Map the longest cached prefix of ``tokens`` into ``slot``.
+
+        Walks the radix tree, increfs every matched block, and installs
+        it in the slot's table; returns the number of leading positions
+        already cached (the engine skips their prefill).  Call before
+        :meth:`ensure` — the private tail extends past the shared head.
+        """
+        if self.prefix_index is None:
+            return 0
+        held = self._blocks.setdefault(slot, [])
+        if held:
+            raise ValueError(f"admit() into non-empty slot {slot}")
+        nodes, matched = self.prefix_index.match(
+            tokens, partial=self.prefix.partial)
+        for j, node in enumerate(nodes):
+            self.refcount[node.block] += 1
+            self.table[slot, j] = node.block
+            held.append((node.block, node.block * self.block_bytes))
+        self._shared_len[slot] = matched
+        return matched
+
+    def register(self, slot: int, tokens: list[int]) -> None:
+        """Publish the slot's full blocks of ``tokens`` (the prefill
+        extent) into the radix tree so later admissions can share them.
+
+        First registrant of a span wins; spans already in the tree are
+        skipped (this slot's block for them is either the shared block
+        itself or a private duplicate that stays private).  New nodes
+        start non-ready — call :meth:`mark_ready` once the prefill round
+        has actually materialized their content on device.
+        """
+        if self.prefix_index is None:
+            return
+        held = self._blocks.get(slot, ())
+        nfull = min(len(tokens) // self.block_size, len(held))
+        if not nfull:
+            return
+        created = self.prefix_index.insert(
+            tokens, [held[j][0] for j in range(nfull)])
+        for node in created:
+            self.refcount[node.block] += 1
+        if created:
+            self._pending.setdefault(slot, []).extend(created)
+
+    def mark_ready(self, slot: int) -> None:
+        """Flip the slot's pending registrations to ready (their prefill
+        round ran; partial-match COW may now copy out of them)."""
+        for node in self._pending.pop(slot, []):
+            if node.parent is not None:
+                node.ready = True
+
+    def prepare_write(self, slot: int, lo: int, hi: int, pools):
+        """Copy-on-write barrier for writes to positions ``[lo, hi]``.
+
+        Positions below the slot's shared prefix length are idempotent
+        rewrites of identical values (KV at position p is a function of
+        the matched token prefix) and stay shared; a *divergent* write
+        (pos >= shared_len) into a block with other sharers gets a
+        private copy first.  Takes and returns the live device pools —
+        the engine's ``self.cache``, not the construction-time
+        ``self.pools`` — so the copy reads current data.
+        """
+        self._prepared[slot] = (lo, hi)
+        held = self._blocks.get(slot)
+        shared = self._shared_len.get(slot, 0)
+        if self.prefix_index is not None and held and hi >= shared:
+            for j in range(max(lo, shared) // self.block_size,
+                           min(hi // self.block_size, len(held) - 1) + 1):
+                bid = held[j][0]
+                if self.refcount.get(bid, 0) <= 1:
+                    continue
+                nbid, nptr = self._alloc_block()
+                pools = self._copy_block(pools, src=bid, dst=nbid)
+                self.cow_copies += 1
+                held[j] = (nbid, nptr)
+                self.table[slot, j] = nbid
+                self._decref(bid)
+        self.pools = pools
+        return pools
+
+    def clear_prefix(self) -> int:
+        """Drop every tree-only cached prefix block; returns the count
+        of blocks returned to the allocator."""
+        if self.prefix_index is None:
+            return 0
+        freed = self.prefix_index.sweep(
+            lambda b: self.refcount.get(b, 0) == 1)
+        for bid in freed:
+            self._decref(bid)
+        return len(freed)
+
+    def shared_len(self, slot: int) -> int:
+        return self._shared_len.get(slot, 0)
+
+    # -- copy-on-write device copy -------------------------------------------
+    def _leaf_axes(self) -> list:
+        """Per-pool-leaf block-pool axis (None = dense ring/window leaf).
+
+        Derived structurally: a paged leaf's shape is the dense leaf's
+        shape with the (batch, seq) pair replaced by the pool dimension
+        ``num_blocks * block_size`` at axis 0 (unstacked layer) or axis
+        1 (scan-stacked layers prepend a layer axis).
+        """
+        if self._leaf_axes_cache is not None:
+            return self._leaf_axes_cache
+        dense = jax.tree_util.tree_leaves(
+            self.model.cache_spec(self.slots, self.max_seq))
+        paged = jax.tree_util.tree_leaves(
+            self.model.paged_cache_spec(self.slots, self.max_seq,
+                                        num_blocks=self.num_blocks,
+                                        block_size=self.block_size))
+        p = self.num_blocks * self.block_size
+        axes: list[int | None] = []
+        for dm, pm in zip(dense, paged):
+            ds, ps = tuple(dm.shape), tuple(pm.shape)
+            if ds == ps:
+                axes.append(None)
+                continue
+            hits = [k for k in (0, 1)
+                    if len(ds) >= k + 2
+                    and ps == ds[:k] + (p,) + ds[k + 2:]]
+            if len(hits) != 1:
+                raise ValueError(
+                    f"cannot identify pool axis for paged leaf {ps} vs "
+                    f"dense {ds} (pool={p}); candidates: {hits}")
+            axes.append(hits[0])
+        self._leaf_axes_cache = axes
+        return axes
+
+    def _copy_block(self, pools, *, src: int, dst: int):
+        """Device-copy one physical block's rows across every paged
+        pool leaf (the COW body)."""
+        leaves, treedef = jax.tree_util.tree_flatten(pools)
+        bs = self.block_size
+        out = []
+        for leaf, ax in zip(leaves, self._leaf_axes()):
+            if ax is None:
+                out.append(leaf)
+                continue
+            row = jax.lax.dynamic_slice_in_dim(leaf, src * bs, bs, axis=ax)
+            out.append(jax.lax.dynamic_update_slice_in_dim(
+                leaf, row, dst * bs, axis=ax))
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     # -- static audit --------------------------------------------------------
     def snapshot(self):
@@ -182,11 +398,17 @@ class PagedKVCache:
 
     def describe(self) -> dict:
         s = self.manager.stats
-        return {"block_size": self.block_size,
-                "num_blocks": self.num_blocks,
-                "max_blocks_per_slot": self.max_blocks,
-                "block_bytes": self.block_bytes,
-                "blocks_in_use": self.blocks_in_use,
-                "manager": type(self.manager).__name__,
-                "device_allocs": s.n_device_allocs,
-                "internal_fragmentation": s.internal_fragmentation}
+        d = {"block_size": self.block_size,
+             "num_blocks": self.num_blocks,
+             "max_blocks_per_slot": self.max_blocks,
+             "block_bytes": self.block_bytes,
+             "blocks_in_use": self.blocks_in_use,
+             "manager": type(self.manager).__name__,
+             "device_allocs": s.n_device_allocs,
+             "internal_fragmentation": s.internal_fragmentation}
+        if self.prefix_index is not None:
+            d["prefix"] = {**self.prefix_index.describe(),
+                           "cow_copies": self.cow_copies,
+                           "shared_blocks": sum(
+                               1 for c in self.refcount.values() if c > 1)}
+        return d

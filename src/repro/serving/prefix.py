@@ -1,0 +1,213 @@
+"""Content-addressed prefix index for the paged KV cache.
+
+A radix tree at *block* granularity: each node owns one physical pool
+block and is keyed by the exact ``block_size``-token span it caches, so
+a path from the root spells out a token prefix whose KV is already on
+device.  Admissions walk the tree with their prompt and map every node
+they match straight into their block table instead of re-allocating and
+re-prefilling — N requests with a shared system prompt pay prefill once.
+
+Sharing is refcount-based (the :class:`PagedKVCache` owns the counts):
+a tree reference and each slot mapping contribute one reference each, so
+a block is only returned to the memory manager when the last sharer —
+tree included — lets go.  Divergent writes into a block with more than
+one reference are copy-on-write (``PagedKVCache.prepare_write``).
+
+Two-phase visibility: nodes are inserted at admission but start
+``ready=False`` — their content only exists on device once the owner's
+prefill round runs.  Full-block matches against non-ready nodes are safe
+*within one admission round* (the joint chunked prefill writes chunk
+``c`` for every admitted slot before any slot reads it), so same-round
+admissions still share; *partial*-block matches copy data out of the
+block (COW) and therefore require ``ready``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterator, Sequence
+
+__all__ = ["PrefixNode", "PrefixIndex"]
+
+
+class PrefixNode:
+    """One cached block: ``tokens`` (the exact span) -> physical block."""
+
+    __slots__ = ("tokens", "block", "children", "parent", "ready",
+                 "last_used")
+
+    def __init__(self, tokens: tuple[int, ...], block: int,
+                 parent: "PrefixNode | None", *, ready: bool,
+                 last_used: int = 0):
+        self.tokens = tokens
+        self.block = block
+        self.parent = parent
+        self.children: dict[tuple[int, ...], PrefixNode] = {}
+        self.ready = ready
+        self.last_used = last_used
+
+    @property
+    def depth(self) -> int:
+        d, node = 0, self.parent
+        while node is not None:
+            d, node = d + 1, node.parent
+        return d
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"PrefixNode(block={self.block}, ready={self.ready}, "
+                f"tokens={self.tokens!r})")
+
+
+def _overlap(a: Sequence[int], b: Sequence[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class PrefixIndex:
+    """Block-granularity radix tree over cached token prefixes."""
+
+    def __init__(self, block_size: int):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.block_size = block_size
+        self.root = PrefixNode((), -1, None, ready=True)
+        self._clock = 0
+        # counters (surfaced through PagedKVCache.describe())
+        self.hits = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+
+    # -- internals -----------------------------------------------------------
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _walk(self) -> Iterator[PrefixNode]:
+        stack = list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    # -- queries -------------------------------------------------------------
+    def match(self, tokens: Sequence[int], *, partial: bool = True,
+              touch: bool = True) -> tuple[list[PrefixNode], int]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns ``(nodes, matched)``: the node path (full-block matches,
+        optionally ending in one *partially* matching ready node) and
+        the number of leading tokens it covers (``matched <=
+        len(tokens)``).  ``touch=False`` peeks without bumping LRU
+        clocks or hit counters (router affinity probing).
+        """
+        bs = self.block_size
+        node, nodes, i = self.root, [], 0
+        while i + bs <= len(tokens):
+            child = node.children.get(tuple(tokens[i:i + bs]))
+            if child is None:
+                break
+            nodes.append(child)
+            node, i = child, i + bs
+        matched = i
+        if partial and i < len(tokens):
+            rest = tuple(tokens[i:])
+            best, best_ov = None, 0
+            for child in node.children.values():
+                if not child.ready:
+                    continue        # partial matches copy data out (COW)
+                ov = _overlap(child.tokens, rest)
+                if ov > best_ov:
+                    best, best_ov = child, ov
+            if best is not None:
+                nodes.append(best)
+                matched += best_ov
+        if touch and nodes:
+            clk = self._tick()
+            for nd in nodes:
+                nd.last_used = clk
+            self.hits += 1
+            self.hit_tokens += matched
+        return nodes, matched
+
+    def match_len(self, tokens: Sequence[int]) -> int:
+        """Peek the cached-prefix length without touching LRU state."""
+        return self.match(tokens, touch=False)[1]
+
+    # -- mutation ------------------------------------------------------------
+    def insert(self, tokens: Sequence[int],
+               blocks: Sequence[int]) -> list[PrefixNode]:
+        """Register the full blocks of ``tokens`` (``blocks[j]`` caches
+        span ``tokens[j*bs:(j+1)*bs]``) as non-ready nodes.
+
+        Walks existing nodes (first registrant of a span wins; a later
+        slot's private block for the same span stays private) and
+        creates the rest.  Returns only the *newly created* nodes — the
+        caller increfs their blocks and flips ``ready`` after prefill.
+        """
+        bs = self.block_size
+        if len(blocks) * bs > len(tokens):
+            raise ValueError("insert needs block_size tokens per block")
+        node, created = self.root, []
+        clk = self._tick()
+        for j, bid in enumerate(blocks):
+            key = tuple(tokens[j * bs:(j + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                child = PrefixNode(key, bid, node, ready=False,
+                                   last_used=clk)
+                node.children[key] = child
+                created.append(child)
+            else:
+                child.last_used = clk
+            node = child
+        return created
+
+    def remove(self, node: PrefixNode) -> None:
+        """Detach one node (must be childless) from the tree."""
+        if node.children:
+            raise ValueError(f"cannot remove non-leaf prefix node {node!r}")
+        parent = node.parent
+        if parent is not None and parent.children.get(node.tokens) is node:
+            del parent.children[node.tokens]
+        node.parent = None
+
+    def evict(self, is_evictable: Callable[[int], bool],
+              limit: int = 1) -> list[int]:
+        """Drop up to ``limit`` least-recently-used *ready leaves* whose
+        block passes ``is_evictable`` (refcount == 1, i.e. tree-only).
+        Returns the freed block ids; the cache unlocks them."""
+        freed: list[int] = []
+        while len(freed) < limit:
+            leaves = [n for n in self._walk()
+                      if not n.children and n.ready and is_evictable(n.block)]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: (n.last_used, n.block))
+            self.remove(victim)
+            freed.append(victim.block)
+            self.evictions += 1
+        return freed
+
+    def sweep(self, is_evictable: Callable[[int], bool]) -> list[int]:
+        """Drop *every* evictable ready leaf, cascading up the tree
+        (``retain=False`` release path / ``clear``)."""
+        freed: list[int] = []
+        while True:
+            batch = self.evict(is_evictable, limit=len(self) + 1)
+            if not batch:
+                return freed
+            freed.extend(batch)
+
+    # -- introspection -------------------------------------------------------
+    def blocks(self) -> frozenset[int]:
+        return frozenset(n.block for n in self._walk())
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self._walk())
+
+    def describe(self) -> dict:
+        return {"nodes": len(self), "hits": self.hits,
+                "hit_tokens": self.hit_tokens, "evictions": self.evictions}

@@ -1,0 +1,253 @@
+"""Multi-replica serving front door: routing policies + ``serve()``.
+
+One :class:`~repro.serving.engine.ServeEngine` continuous-batches over
+its own slot pool; the :class:`Router` scales that *out* — it owns N
+engine replicas, places every arriving request on one of them through a
+pluggable :class:`RoutingPolicy`, and steps all replicas in lockstep.
+Replicas are independent (own KV pool, own radix tree, own scheduler),
+so placement is where cross-replica intelligence lives:
+
+``round_robin``      cycle through replicas — the stateless baseline.
+``least_loaded``     fewest in-flight requests (active + queued).
+``prefix_affinity``  the replica whose radix tree caches the longest
+                     prefix of the prompt (probed without touching LRU
+                     state), so requests with a shared system prompt
+                     pile onto the replica that already paid its
+                     prefill; load-only tie-break keeps cold prompts
+                     balanced.
+
+:func:`serve` is the stream front door: it pulls arrivals from a
+callable or iterator (the continuous-batching analogue of an async
+request queue — each engine step is one tick), routes them, steps the
+replicas, and yields finished requests as they complete.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Iterable, Iterator, Protocol, Sequence, Union
+
+from repro.runtime import ServingPolicy, current_session
+
+from .engine import Request, ServeEngine
+
+__all__ = ["RoutingPolicy", "RoundRobinRouting", "LeastLoadedRouting",
+           "PrefixAffinityRouting", "make_routing", "Router", "serve",
+           "timed_stream"]
+
+
+class RoutingPolicy(Protocol):
+    """Placement policy: pick a replica index for an arriving request."""
+
+    name: str
+
+    def route(self, req: Request, engines: Sequence[ServeEngine]) -> int:
+        ...
+
+
+def _load(engine: ServeEngine) -> int:
+    return len(engine.active) + engine.waiting
+
+
+class RoundRobinRouting:
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def route(self, req: Request, engines: Sequence[ServeEngine]) -> int:
+        i = self._next % len(engines)
+        self._next += 1
+        return i
+
+
+class LeastLoadedRouting:
+    name = "least_loaded"
+
+    def route(self, req: Request, engines: Sequence[ServeEngine]) -> int:
+        return min(range(len(engines)), key=lambda i: (_load(engines[i]), i))
+
+
+class PrefixAffinityRouting:
+    """Longest cached radix match wins; ties fall back to least-loaded.
+
+    Probing uses ``PrefixIndex.match_len`` (no LRU touch, no counters),
+    so routing never perturbs the caches it inspects.  Engines without
+    a radix tree (sharing off / unsupported model) probe as 0 and the
+    policy degrades to least-loaded.
+    """
+
+    name = "prefix_affinity"
+
+    def route(self, req: Request, engines: Sequence[ServeEngine]) -> int:
+        def key(i: int) -> tuple[int, int, int]:
+            eng = engines[i]
+            index = eng.kv.prefix_index if eng.kv is not None else None
+            cached = (index.match_len(req.prompt)
+                      if index is not None else 0)
+            return (-cached, _load(eng), i)
+        return min(range(len(engines)), key=key)
+
+
+_ROUTING: dict[str, Callable[[], Any]] = {
+    "round_robin": RoundRobinRouting,
+    "rr": RoundRobinRouting,
+    "least_loaded": LeastLoadedRouting,
+    "prefix_affinity": PrefixAffinityRouting,
+    "prefix": PrefixAffinityRouting,
+}
+
+
+def make_routing(spec: Any) -> RoutingPolicy:
+    """Registry name or ready-made policy instance -> RoutingPolicy."""
+    if isinstance(spec, str):
+        try:
+            return _ROUTING[spec]()
+        except KeyError:
+            raise ValueError(f"unknown routing policy {spec!r}; known: "
+                             f"{sorted(set(_ROUTING))}") from None
+    if callable(getattr(spec, "route", None)):
+        return spec
+    raise TypeError(f"routing spec {spec!r} is neither a registry name "
+                    "nor a RoutingPolicy")
+
+
+# arrivals: an iterator yielding Request (submit now) or None (tick
+# done), or a callable tick -> Request | iterable of Requests | None
+Stream = Union[Iterator[Any], Callable[[int], Any]]
+
+
+def timed_stream(trace: Iterable[tuple[int, Request]]) -> Iterator[Any]:
+    """Turn ``(arrival_tick, request)`` pairs into a serve() stream.
+
+    Each ``None`` yielded ends one tick; requests are released once the
+    tick counter reaches their arrival.  Pairs must be sorted by
+    arrival tick (a Poisson trace built from cumulative gaps is).
+    """
+    pending = iter(trace)
+    nxt = next(pending, None)
+    tick = 0
+    while nxt is not None:
+        while nxt is not None and nxt[0] <= tick:
+            yield nxt[1]
+            nxt = next(pending, None)
+        yield None
+        tick += 1
+
+
+class Router:
+    """N engine replicas behind one routing policy, stepped in lockstep."""
+
+    def __init__(self, engines: Sequence[ServeEngine],
+                 routing: Any | None = None):
+        if not engines:
+            raise ValueError("Router needs at least one engine replica")
+        self.engines = list(engines)
+        if routing is None:
+            routing = self.engines[0].policy.routing
+        self.routing = make_routing(routing)
+        self.routed: dict[int, int] = {}          # request uid -> replica
+        self.steps = 0
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Route one request; returns the replica index it landed on."""
+        i = self.routing.route(req, self.engines)
+        if not 0 <= i < len(self.engines):
+            raise ValueError(f"routing policy {self.routing.name!r} "
+                             f"returned replica {i} of {len(self.engines)}")
+        self.engines[i].submit(req)
+        self.routed[req.uid] = i
+        return i
+
+    @property
+    def waiting(self) -> int:
+        return sum(e.waiting for e in self.engines)
+
+    @property
+    def active(self) -> int:
+        return sum(len(e.active) for e in self.engines)
+
+    def step(self) -> list[Request]:
+        """Advance every replica one step; returns finished requests."""
+        self.steps += 1
+        done: list[Request] = []
+        for eng in self.engines:
+            done.extend(eng.step())
+        return done
+
+    def run_until_done(self, max_steps: int = 10000) -> list[Request]:
+        out: list[Request] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.active and not self.waiting:
+                break
+        return out
+
+    # -- stream front door ---------------------------------------------------
+    def serve(self, stream: Stream,
+              max_steps: int = 100000) -> Iterator[Request]:
+        """Continuous batching from a request stream.
+
+        Pulls arrivals for the current tick (iterator: items until a
+        ``None``; callable: one call with the tick number), routes
+        them, steps every replica, and yields requests the moment they
+        finish.  Runs until the stream is exhausted and all in-flight
+        work drains.
+        """
+        it = stream if hasattr(stream, "__next__") else None
+        exhausted = False
+        for tick in itertools.count():
+            if tick >= max_steps:
+                raise RuntimeError(f"serve() exceeded max_steps={max_steps} "
+                                   "with work still in flight")
+            if not exhausted:
+                arrivals: list[Request] = []
+                if it is not None:
+                    for item in it:
+                        if item is None:
+                            break
+                        arrivals.append(item)
+                    else:
+                        exhausted = True
+                else:
+                    got = stream(tick)
+                    if got is None:
+                        exhausted = True
+                    elif isinstance(got, Request):
+                        arrivals = [got]
+                    else:
+                        arrivals = list(got)
+                for req in arrivals:
+                    self.submit(req)
+            yield from self.step()
+            if exhausted and not self.active and not self.waiting:
+                return
+
+    # -- provenance ----------------------------------------------------------
+    def describe(self) -> dict:
+        return {"replicas": len(self.engines),
+                "routing": self.routing.name,
+                "steps": self.steps,
+                "placement": {uid: i for uid, i in sorted(self.routed.items())},
+                "engines": [e.describe() for e in self.engines]}
+
+
+def serve(model, params, stream: Stream, *, replicas: int = 2,
+          batch_slots: int, max_seq: int,
+          policy: ServingPolicy | None = None,
+          routing: Any | None = None,
+          max_steps: int = 100000) -> Iterator[Request]:
+    """Front door: build ``replicas`` engine replicas under the current
+    session, route a request stream across them, and yield finished
+    requests as they complete.  ``routing`` (or the session
+    ``ServingPolicy.routing``) picks the placement policy."""
+    if replicas < 1:
+        raise ValueError("serve() needs at least one replica")
+    if policy is None:
+        policy = current_session().serving
+    engines = [ServeEngine(model, params, batch_slots=batch_slots,
+                           max_seq=max_seq, policy=policy)
+               for _ in range(replicas)]
+    router = Router(engines, routing=routing)
+    yield from router.serve(stream, max_steps=max_steps)

@@ -349,7 +349,10 @@ def test_serving_policy_lands_in_session_describe(tiny):
     d = eng.session.describe()
     assert d["serving"] == {"cache": "paged", "block_size": 8,
                             "num_blocks": None, "scheduler": "sjf",
-                            "allocator": "caching", "prefill_chunk": 16}
+                            "allocator": "caching", "prefill_chunk": 16,
+                            "prefix": {"enabled": False, "retain": True,
+                                       "partial": True},
+                            "routing": "round_robin"}
     # explicit policy argument overrides the session and is recorded
     eng2 = ServeEngine(model, params, batch_slots=1, max_seq=32,
                        policy=ServingPolicy(cache="dense"))

@@ -1,0 +1,359 @@
+"""Prefix-sharing paged KV cache + multi-replica router.
+
+Sharing must be invisible in the tokens: admissions that map cached
+blocks out of the radix tree (full-block and partial-block/COW matches,
+preempt-and-requeue, retained cross-round hits) decode bit-identically
+to the sharing-off paged path and to dense — while measurably skipping
+prefill work.  The router half: placement policies, the ``serve()``
+stream front door, and routed output == single-engine output.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.runtime import AnalysisPolicy, PrefixPolicy, ServingPolicy
+from repro.serving import (PrefixIndex, Request, Router, ServeEngine,
+                           make_routing, serve, timed_stream)
+
+SYS = [7, 3, 11, 5, 2, 13, 17, 1, 9, 4, 23, 6, 29, 8, 31, 10,
+       12, 37, 14, 41, 15, 43, 16, 47, 18, 53, 19, 59, 20, 61, 21, 22]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("codeqwen1.5-7b", reduced=True, n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _run(model, params, policy, prompts, max_new=6, slots=4, max_seq=64,
+         stagger=True):
+    eng = ServeEngine(model, params, batch_slots=slots, max_seq=max_seq,
+                      policy=policy)
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    if stagger:
+        eng.submit(reqs[0])
+        eng.step()
+        eng.step()
+        for r in reqs[1:]:
+            eng.submit(r)
+    else:
+        for r in reqs:
+            eng.submit(r)
+    done = {r.uid: r.generated for r in eng.run_until_done()}
+    return done, eng
+
+
+PAGED = ServingPolicy(cache="paged", block_size=8, prefill_chunk=8)
+
+
+def test_shared_prefix_identical_to_dense_and_sharing_off(tiny):
+    """The tentpole regression: admissions sharing a 32-token system
+    prompt must decode token-identically to dense and to sharing-off
+    paged — while actually skipping prefill for the shared blocks."""
+    model, params = tiny
+    prompts = [SYS + [40 + i, 50 + i, 33 + i] for i in range(4)]
+    with repro.session(analysis=AnalysisPolicy(level="strict")):
+        dense, _ = _run(model, params,
+                        ServingPolicy(cache="dense", prefill_chunk=8),
+                        prompts)
+        off, eoff = _run(model, params, PAGED, prompts)
+        on, eon = _run(model, params, PAGED.replace(prefix=True), prompts)
+    assert dense == off == on
+    assert eoff.prefill_tokens_saved == 0
+    # later admissions skip the shared full blocks (32 = 4 x block 8)
+    assert eon.prefill_tokens_saved >= 3 * 32
+    assert eon.shared_admissions == 3
+    # all references drained: no slot blocks, tree clears to zero
+    assert eon.kv.blocks_in_use == 0
+    eon.kv.clear_prefix()
+    assert eon.kv.refcount == {}
+    assert not eon.kv.audit().diagnostics
+
+
+def test_sharing_degrades_silently_on_window_model():
+    """Sliding-window layers keep per-slot dense ring caches that a
+    skipped prefill would leave unfilled — requesting sharing on such a
+    model must silently degrade to shared_len=0, not corrupt decoding."""
+    cfg = get_config("gemma3-27b", reduced=True)   # window 16 interleave
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    assert not model.supports_prefix_sharing()
+    prompts = [SYS[:20] + [40 + i] for i in range(3)]
+    pol = ServingPolicy(cache="paged", block_size=8, prefill_chunk=5)
+    off, _ = _run(model, params, pol, prompts, max_new=5, max_seq=48)
+    on, eng = _run(model, params, pol.replace(prefix=True), prompts,
+                   max_new=5, max_seq=48)
+    assert not eng.prefix_on
+    assert eng.prefill_tokens_saved == 0
+    assert off == on
+
+
+def test_cow_on_first_divergent_token(tiny):
+    """A fully cached prompt ending mid-block writes its first generated
+    token into the still-shared block — that write must copy-on-write
+    (exactly once) and decoding must match the sharing-off path."""
+    model, params = tiny
+    A = [(3 * i + 1) % 60 + 1 for i in range(18)]   # 4 full blocks at bs=4
+    C = A[:14]                                      # cached incl. partial
+    pol = ServingPolicy(cache="paged", block_size=4, prefill_chunk=4,
+                        prefix=True)
+
+    def pair(policy):
+        eng = ServeEngine(model, params, batch_slots=2, max_seq=32,
+                          policy=policy)
+        eng.submit(Request(uid=0, prompt=list(A), max_new_tokens=4))
+        eng.run_until_done()
+        eng.submit(Request(uid=1, prompt=list(C), max_new_tokens=4))
+        done = {r.uid: r.generated for r in eng.run_until_done()}
+        return done, eng
+
+    with repro.session(analysis=AnalysisPolicy(level="strict")):
+        on, eon = pair(pol)
+        off, _ = pair(pol.replace(prefix=False))
+    assert on == off
+    # whole prompt came out of the tree; the divergent decode write COWed
+    assert eon.prefill_tokens_saved >= len(C) - 1
+    assert eon.kv.cow_copies == 1
+
+
+def test_cow_on_divergent_prefill_write(tiny):
+    """A prompt sharing a *partial* block (prefix overlap shorter than
+    the block) diverges inside it during prefill — COW before the
+    tokens land, identical output."""
+    model, params = tiny
+    A = [(5 * i + 2) % 60 + 1 for i in range(18)]
+    B = A[:14] + [33, 44]                # diverges at pos 14, block 3
+    pol = ServingPolicy(cache="paged", block_size=4, prefill_chunk=4,
+                        prefix=True)
+
+    def pair(policy):
+        eng = ServeEngine(model, params, batch_slots=2, max_seq=32,
+                          policy=policy)
+        eng.submit(Request(uid=0, prompt=list(A), max_new_tokens=4))
+        eng.run_until_done()
+        eng.submit(Request(uid=1, prompt=list(B), max_new_tokens=4))
+        done = {r.uid: r.generated for r in eng.run_until_done()}
+        return done, eng
+
+    with repro.session(analysis=AnalysisPolicy(level="strict")):
+        on, eon = pair(pol)
+        off, _ = pair(pol.replace(prefix=False))
+    assert on == off
+    assert eon.kv.cow_copies == 1
+    # partial=False restricts matches to whole blocks: no COW needed
+    strict_blocks, es = pair(pol.replace(
+        prefix=PrefixPolicy(enabled=True, partial=False)))
+    assert strict_blocks == off
+    assert es.kv.cow_copies == 0
+
+
+def test_refcounts_return_to_zero_after_all_releases(tiny):
+    """Every admission increfs shared blocks; finish/preempt decrefs.
+    After all requests drain and the tree is cleared, the refcount map
+    must be empty and the allocator must hold only the trash block."""
+    model, params = tiny
+    prompts = [SYS + [40 + i] for i in range(5)]
+    on, eng = _run(model, params, PAGED.replace(prefix=True), prompts,
+                   slots=3)
+    assert len(on) == 5
+    assert eng.kv.blocks_in_use == 0
+    assert all(c == 1 for c in eng.kv.refcount.values())  # tree-only refs
+    eng.kv.clear_prefix()
+    assert eng.kv.refcount == {}
+    assert not eng.kv.audit().diagnostics
+    # retain=False drops tree references as requests finish
+    on2, eng2 = _run(model, params, PAGED.replace(
+        prefix=PrefixPolicy(enabled=True, retain=False)), prompts, slots=3)
+    assert on2 == on
+    assert eng2.kv.refcount == {}
+
+
+def test_preempt_and_requeue_token_identical_with_sharing(tiny):
+    """The satellite regression: preemption victims holding shared
+    blocks must only decref them, and the requeued request re-admits
+    through the radix tree — same tokens as the uncontended run."""
+    model, params = tiny
+    prompts = [SYS[:16] + [40 + i, 50 + i, 33 + i] for i in range(4)]
+    base = dict(cache="paged", block_size=4, prefill_chunk=8,
+                num_blocks=13)                      # tight pool: preempts
+    with repro.session(analysis=AnalysisPolicy(level="strict")):
+        off, eoff = _run(model, params, ServingPolicy(**base, prefix=False),
+                         prompts, max_new=10, slots=3, stagger=False)
+        on, eon = _run(model, params, ServingPolicy(**base, prefix=True),
+                       prompts, max_new=10, slots=3, stagger=False)
+    assert off == on
+    assert eon.preemptions + eoff.preemptions > 0   # pressure actually hit
+    assert eon.kv.blocks_in_use == 0
+    eon.kv.clear_prefix()
+    assert eon.kv.refcount == {}
+
+
+@settings(max_examples=12, deadline=None)
+@given(specs=st.lists(
+           st.tuples(st.integers(min_value=0, max_value=24),
+                     st.lists(st.integers(min_value=1, max_value=60),
+                              min_size=1, max_size=8)),
+           min_size=2, max_size=5),
+       seed=st.integers(min_value=1, max_value=30))
+def test_random_prefix_overlaps_match_sharing_off(tiny_cached, specs, seed):
+    """Property: for random families of prompts overlapping a random
+    common stem at random depths, sharing-on decodes exactly what
+    sharing-off decodes."""
+    model, params = tiny_cached
+    rng = np.random.default_rng(seed)
+    stem = list(rng.integers(1, 60, size=24))
+    prompts = [stem[:cut] + list(tail) for cut, tail in specs]
+    pol = ServingPolicy(cache="paged", block_size=4, prefill_chunk=4)
+    off, _ = _run(model, params, pol, prompts, max_new=4, slots=3,
+                  stagger=False)
+    on, eng = _run(model, params, pol.replace(prefix=True), prompts,
+                   max_new=4, slots=3, stagger=False)
+    assert off == on
+    assert not eng.kv.audit().diagnostics
+
+
+@pytest.fixture(scope="module")
+def tiny_cached(tiny):
+    # hypothesis re-runs the test body; reuse the module model
+    return tiny
+
+
+# -- router / serve() --------------------------------------------------------
+
+
+def test_routed_output_matches_single_engine(tiny):
+    """Two replicas behind the router must produce exactly the tokens a
+    single engine produces for the same requests."""
+    model, params = tiny
+    prompts = [SYS + [40 + i, 50 + i] for i in range(6)]
+    pol = PAGED.replace(prefix=True, routing="prefix_affinity")
+    single, _ = _run(model, params, pol, prompts, stagger=False)
+    router = Router([ServeEngine(model, params, batch_slots=4, max_seq=64,
+                                 policy=pol) for _ in range(2)])
+    for i, p in enumerate(prompts):
+        router.submit(Request(uid=i, prompt=list(p), max_new_tokens=6))
+    routed = {r.uid: r.generated for r in router.run_until_done()}
+    assert routed == single
+    d = router.describe()
+    assert d["replicas"] == 2 and d["routing"] == "prefix_affinity"
+    assert set(d["placement"]) == set(range(6))
+
+
+def test_prefix_affinity_routes_to_warm_replica(tiny):
+    """Once one replica has cached the system prompt, later arrivals
+    with the same prefix must land on it (longest radix match), while
+    cold prompts fall back to least-loaded."""
+    model, params = tiny
+    pol = PAGED.replace(prefix=True, routing="prefix_affinity")
+    router = Router([ServeEngine(model, params, batch_slots=4, max_seq=64,
+                                 policy=pol) for _ in range(2)])
+    first = router.submit(Request(uid=0, prompt=SYS + [40],
+                                  max_new_tokens=3))
+    router.run_until_done()                 # replica `first` is now warm
+    for i in range(1, 4):
+        assert router.submit(Request(uid=i, prompt=SYS + [40 + i],
+                                     max_new_tokens=3)) == first
+    # a prompt with no cached prefix balances away from the loaded replica
+    cold = router.submit(Request(uid=9, prompt=[60, 61, 62],
+                                 max_new_tokens=3))
+    assert cold != first
+    router.run_until_done()
+
+
+def test_round_robin_and_least_loaded_placement(tiny):
+    model, params = tiny
+    engines = [ServeEngine(model, params, batch_slots=2, max_seq=32,
+                           policy=PAGED) for _ in range(3)]
+    rr = Router(engines, routing="round_robin")
+    got = [rr.submit(Request(uid=i, prompt=[1 + i], max_new_tokens=2))
+           for i in range(5)]
+    assert got == [0, 1, 2, 0, 1]
+    rr.run_until_done()
+    ll = make_routing("least_loaded")
+    engines[0].submit(Request(uid=90, prompt=[5], max_new_tokens=2))
+    assert ll.route(Request(uid=91, prompt=[6]), engines) == 1
+    engines[0].run_until_done()
+    with pytest.raises(ValueError):
+        make_routing("nope")
+    with pytest.raises(TypeError):
+        make_routing(123)
+
+
+def test_serve_stream_front_door(tiny):
+    """serve(): timed-iterator arrivals admitted continuously across
+    engine steps, finished requests yielded as they complete, output
+    identical to a single pre-staged engine."""
+    model, params = tiny
+    prompts = [SYS[:12] + [40 + i] for i in range(5)]
+    pol = PAGED.replace(prefix=True)
+    single, _ = _run(model, params, pol, prompts, max_new=4, stagger=False)
+    trace = [(2 * i, Request(uid=i, prompt=list(p), max_new_tokens=4))
+             for i, p in enumerate(prompts)]
+    with repro.session(serving=pol):
+        got = {r.uid: r.generated
+               for r in serve(model, params, timed_stream(trace),
+                              replicas=2, batch_slots=4, max_seq=64)}
+    assert got == single
+    # callable arrivals: one request per tick, then exhausted
+    with repro.session(serving=pol):
+        def arrivals(tick):
+            if tick < len(prompts):
+                return Request(uid=tick, prompt=list(prompts[tick]),
+                               max_new_tokens=4)
+            return None
+        got2 = {r.uid: r.generated
+                for r in serve(model, params, arrivals, replicas=3,
+                               batch_slots=2, max_seq=64)}
+    assert got2 == single
+
+
+# -- prefix index unit behavior ----------------------------------------------
+
+
+def test_prefix_index_match_insert_evict():
+    idx = PrefixIndex(4)
+    created = idx.insert(list(range(1, 13)), [5, 6, 7])
+    assert [n.block for n in created] == [5, 6, 7]
+    # non-ready nodes: full-block walk matches, partial does not
+    nodes, m = idx.match(list(range(1, 11)))
+    assert m == 8 and [n.block for n in nodes] == [5, 6]
+    for n in created:
+        n.ready = True
+    nodes, m = idx.match(list(range(1, 11)))
+    assert m == 10 and nodes[-1].block == 7      # partial tail overlap 2
+    assert idx.match_len(list(range(1, 13))) == 12
+    assert idx.match([9, 9, 9]) == ([], 0)
+    # dedupe: re-inserting an existing span creates nothing
+    assert idx.insert(list(range(1, 9)), [9, 9]) == []
+    # LRU eviction only touches leaves the refcount marks tree-only
+    refcount = {5: 2, 6: 1, 7: 1}
+    freed = idx.evict(lambda b: refcount.get(b, 0) == 1, limit=8)
+    assert freed == [7, 6] and idx.blocks() == {5}
+    assert len(idx) == 1
+
+
+def test_prefix_policy_in_session_describe(tiny):
+    """Opt-in provenance: PrefixPolicy and routing land in
+    Session.describe() like every other serving knob."""
+    model, params = tiny
+    pol = ServingPolicy(cache="paged", prefix={"enabled": True,
+                                               "retain": False},
+                        routing="prefix_affinity")
+    with repro.session(serving=pol):
+        eng = ServeEngine(model, params, batch_slots=1, max_seq=32)
+    d = eng.session.describe()["serving"]
+    assert d["prefix"] == {"enabled": True, "retain": False,
+                           "partial": True}
+    assert d["routing"] == "prefix_affinity"
+    assert eng.describe()["prefix_sharing"] is True
+    # bare-bool coercion
+    assert ServingPolicy(prefix=True).prefix == PrefixPolicy(enabled=True)
