@@ -1,0 +1,80 @@
+"""Speculative decoding example: n-gram self-drafting with wide verify
+and block-table rollback on the paged KV cache — proposals the target
+rejects are rolled back by truncating the slot's block table, and greedy
+output is token-for-token identical to one-token decode.
+
+Run:  PYTHONPATH=src python examples/serve_spec.py
+"""
+
+import time
+
+import jax
+
+import repro
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.runtime import ServingPolicy
+from repro.serving import Request, ServeEngine
+
+PROMPTS = [[3, 1, 4, 1, 5, 9, 2, 6], [5, 3, 5, 8, 9],
+           [7, 9, 50, 28, 8, 41], [16, 39, 9, 37, 51, 5, 8]]
+
+
+def _requests():
+    return [Request(uid=uid, prompt=list(p), max_new_tokens=24)
+            for uid, p in enumerate(PROMPTS)]
+
+
+def _drive(engine):
+    for req in _requests():
+        engine.submit(req)
+    t0 = time.time()
+    done = engine.run_until_done()
+    return {r.uid: r.generated for r in done}, time.time() - t0
+
+
+def main():
+    # codeqwen has no sliding-window layers, so the paged cache can
+    # rewind — the requirement for speculative rollback
+    cfg = get_config("codeqwen1.5-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base = dict(cache="paged", block_size=8, prefill_chunk=8)
+
+    # reference: plain one-token greedy decode
+    with repro.session(tag="serve_spec:plain"):
+        plain = ServeEngine(model, params, batch_slots=4, max_seq=64,
+                            policy=ServingPolicy(**base))
+    ref, t_plain = _drive(plain)
+
+    # speculative: n-gram self-drafting, k=4 proposals per verify round
+    spec_policy = ServingPolicy(**base, speculative=dict(
+        enabled=True, k=4, draft="ngram", ngram=3))
+    with repro.session(tag="serve_spec:spec"):
+        spec = ServeEngine(model, params, batch_slots=4, max_seq=64,
+                           policy=spec_policy)
+    out, t_spec = _drive(spec)
+
+    desc = spec.describe()["speculative"]
+    kv = spec.describe()["kv_cache"]
+    toks = sum(len(g) for g in out.values())
+    print(f"[serve_spec] {len(out)} requests, {toks} tokens | "
+          f"{desc['verify_calls']} wide-verify calls vs "
+          f"{plain.decode_calls} one-token decode calls")
+    print(f"[serve_spec] accepted/step {desc['accepted_per_step']} "
+          f"(accepted {desc['accepted_tokens']}, rejected "
+          f"{desc['rejected_tokens']}), rollback freed "
+          f"{kv['rollback_blocks_freed']} blocks | speedup "
+          f"{t_plain / max(t_spec, 1e-9):.2f}x")
+    print(f"[serve_spec] serving provenance: "
+          f"{spec.session.describe()['serving']['speculative']}")
+
+    # the acceptance rule guarantees identity regardless of draft quality
+    assert out == ref, "speculative/plain decode divergence!"
+    assert desc["verify_calls"] > 0, "speculative path never engaged"
+    assert spec.kv.blocks_in_use == 0, "speculative decode leaked blocks"
+    print("serve_spec OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -278,7 +278,9 @@ def _snap(table: Any, held: dict[int, list[int]], live: set[int],
           refcounts: dict[int, int] | None = None,
           shared_len: dict[int, int] | None = None,
           prepared: dict[int, tuple[int, int]] | None = None,
-          prefix_blocks: set[int] | None = None) -> "CacheSnapshot":
+          prefix_blocks: set[int] | None = None,
+          committed: dict[int, int] | None = None,
+          forks: dict[int, int] | None = None) -> "CacheSnapshot":
     from .serving import CacheSnapshot
 
     return CacheSnapshot(num_blocks=num_blocks, block_size=4,
@@ -288,7 +290,9 @@ def _snap(table: Any, held: dict[int, list[int]], live: set[int],
                          refcounts=refcounts,
                          shared_len=shared_len or {},
                          prepared=prepared or {},
-                         prefix_blocks=frozenset(prefix_blocks or ()))
+                         prefix_blocks=frozenset(prefix_blocks or ()),
+                         committed=committed or {},
+                         forks=forks or {})
 
 
 def _kv_check(snap: "CacheSnapshot") -> DiagnosticReport:
@@ -343,6 +347,27 @@ def _kv_shared_write() -> DiagnosticReport:
                            {0: [1, 2], 1: [1]}, live={0, 1, 2},
                            refcounts={1: 2, 2: 1},
                            shared_len={0: 8, 1: 2}, prepared={1: (3, 3)}))
+
+
+def _kv_rollback_dangling() -> DiagnosticReport:
+    # speculative verify grew slot 0 to 3 blocks for a wide write, the
+    # round rejected the suffix (committed length 5, write intent
+    # through position 4 = 2 blocks of 4) — but rollback never
+    # truncated the block table, leaving block 3 dangling
+    return _kv_check(_snap([[1, 2, 3], [0, 0, 0]],
+                           {0: [1, 2, 3]}, live={0, 1, 2, 3},
+                           refcounts={1: 1, 2: 1, 3: 1},
+                           prepared={0: (0, 4)}, committed={0: 5}))
+
+
+def _kv_fork_refcount() -> DiagnosticReport:
+    # slot 1 forked from slot 0 (copy-on-write beam): both map block 1,
+    # but the fork forgot its refcount++ — the first release frees
+    # memory the sibling beam still reads
+    return _kv_check(_snap([[1, 2, 0], [1, 3, 0]],
+                           {0: [1, 2], 1: [1, 3]}, live={0, 1, 2, 3},
+                           refcounts={1: 1, 2: 1, 3: 1},
+                           forks={1: 0}))
 
 
 def _kv_prefix_stale() -> DiagnosticReport:
@@ -449,6 +474,12 @@ MUTATIONS: tuple[Mutation, ...] = (
     Mutation("kv_prefix_stale", "kv.prefix-stale",
              "the radix tree advertises a block the allocator freed",
              _kv_prefix_stale),
+    Mutation("kv_rollback_dangling", "kv.rollback-dangling",
+             "speculative rollback left rejected-suffix blocks mapped",
+             _kv_rollback_dangling),
+    Mutation("kv_fork_refcount", "kv.fork-refcount",
+             "a beam fork mapped parent blocks without refcount++",
+             _kv_fork_refcount),
     Mutation("bf16_accum", "numerics.bf16-accum",
              "a long reduction accumulating in bfloat16",
              _bf16_accum),

@@ -41,6 +41,26 @@ keep the exclusive-ownership semantics above.
 ``kv.prefix-stale``        the radix tree advertises a block the
                            allocator freed — the next match maps
                            recycled memory into a fresh request.
+
+Speculative decoding and beam forking (``serving/speculative.py``,
+``serving/beam.py``) add two more views — per-slot committed lengths
+maintained by the engine's rollback path, and the child→parent fork
+map — and two rules over them:
+
+``kv.rollback-dangling``   a slot holds blocks past its committed
+                           length with no declared write intent — the
+                           rejected-suffix rollback failed to truncate
+                           the block table, so rejected KV garbage
+                           stays mapped (and readable) forever.
+                           Engages only when committed lengths are
+                           recorded (speculative engines).
+``kv.fork-refcount``       a block shared between a forked child and
+                           its parent has fewer recorded references
+                           than mappings — the fork forgot its
+                           refcount++, so the first release frees
+                           memory the sibling still reads.  Reported
+                           instead of ``kv.refcount-underflow`` when
+                           the block belongs to a live fork pair.
 """
 
 from __future__ import annotations
@@ -72,6 +92,9 @@ class CacheSnapshot:
     shared_len: Mapping[int, int] = field(default_factory=dict)
     prepared: Mapping[int, tuple[int, int]] = field(default_factory=dict)
     prefix_blocks: frozenset[int] = frozenset()  # radix tree's block set
+    # speculative / forking views (empty = plain decode)
+    committed: Mapping[int, int] = field(default_factory=dict)
+    forks: Mapping[int, int] = field(default_factory=dict)  # child -> parent
 
     def to_json(self) -> dict[str, Any]:
         return {"num_blocks": self.num_blocks,
@@ -89,7 +112,10 @@ class CacheSnapshot:
                 "prepared": {int(s): [int(v[0]), int(v[1])]
                              for s, v in self.prepared.items()},
                 "prefix_blocks": sorted(int(b)
-                                        for b in self.prefix_blocks)}
+                                        for b in self.prefix_blocks),
+                "committed": {int(s): int(v)
+                              for s, v in self.committed.items()},
+                "forks": {int(c): int(p) for c, p in self.forks.items()}}
 
 
 def _live_offsets(manager: Any) -> Sequence[int]:
@@ -127,7 +153,9 @@ def snapshot_cache(cache: "PagedKVCache") -> CacheSnapshot:
                          shared_len=dict(getattr(cache, "_shared_len", {})),
                          prepared=dict(getattr(cache, "_prepared", {})),
                          prefix_blocks=(index.blocks() if index is not None
-                                        else frozenset()))
+                                        else frozenset()),
+                         committed=dict(getattr(cache, "_committed", {})),
+                         forks=dict(getattr(cache, "_forks", {})))
 
 
 def check_paged_cache(snap: CacheSnapshot,
@@ -227,6 +255,14 @@ def check_paged_cache(snap: CacheSnapshot,
                                "the allocator freed it — the next prefix "
                                "match maps recycled memory into a fresh "
                                "request", where=where)
+        # blocks shared between a forked child and its parent: an
+        # under-count there is a forgotten fork refcount++, reported as
+        # kv.fork-refcount instead of the generic underflow
+        fork_shared: set[int] = set()
+        for child, parent in sorted(snap.forks.items()):
+            both = (set(snap.held.get(child, ()))
+                    & set(snap.held.get(parent, ())))
+            fork_shared |= both - {0}
         for bid in sorted(set(refs) | (snap.prefix_blocks - {0})):
             if bid in stale:
                 continue                 # already fatal; don't double-report
@@ -234,12 +270,22 @@ def check_paged_cache(snap: CacheSnapshot,
                                          else 0)
             have = int(rc.get(bid, 0))
             if have < expect:
-                report.add("kv.refcount-underflow", Severity.ERROR,
-                           f"block {bid} has refcount {have} but "
-                           f"{expect} references (slot mappings"
-                           f"{' + radix tree' if bid in snap.prefix_blocks else ''})"
-                           " — one release away from freeing memory still "
-                           "read through a live table", where=where)
+                if bid in fork_shared:
+                    report.add("kv.fork-refcount", Severity.ERROR,
+                               f"block {bid} is shared by a forked child "
+                               f"and its parent but has refcount {have} "
+                               f"for {expect} mappings — the fork forgot "
+                               "its refcount++, so the first release "
+                               "frees memory the sibling beam still "
+                               "reads", where=where)
+                else:
+                    report.add("kv.refcount-underflow", Severity.ERROR,
+                               f"block {bid} has refcount {have} but "
+                               f"{expect} references (slot mappings"
+                               f"{' + radix tree' if bid in snap.prefix_blocks else ''})"
+                               " — one release away from freeing memory "
+                               "still read through a live table",
+                               where=where)
             elif have > expect:
                 report.add("kv.leak", Severity.ERROR,
                            f"block {bid} has refcount {have} but only "
@@ -262,6 +308,26 @@ def check_paged_cache(snap: CacheSnapshot,
                                f"{int(rc.get(bid, 0)) - 1} other sharer(s) "
                                "still reference — no copy-on-write "
                                "happened", where=where)
+    # -- speculative rollback rule (committed lengths recorded only) ---------
+    if snap.committed:
+        bs = snap.block_size
+        for slot, length in sorted(snap.committed.items()):
+            blocks = snap.held.get(slot, ())
+            if not blocks:
+                continue
+            # blocks past the committed content are legitimate only
+            # while covered by a declared write intent (the engine's
+            # begin_write before a verify round grows the mapping)
+            hi = int(snap.prepared.get(slot, (0, int(length) - 1))[1])
+            limit = max(int(length) - 1, hi) // bs + 1
+            if len(blocks) > limit:
+                report.add("kv.rollback-dangling", Severity.ERROR,
+                           f"slot {slot} holds {len(blocks)} blocks but "
+                           f"its committed length {length} (+ write "
+                           f"intent through position {hi}) justifies "
+                           f"only {limit} — the rejected-suffix rollback "
+                           "failed to truncate the block table, leaving "
+                           "rejected KV garbage mapped", where=where)
     if snap.live_blocks:
         if 0 not in snap.live_blocks:
             report.add("kv.trash-block", Severity.ERROR,

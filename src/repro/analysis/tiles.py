@@ -105,6 +105,23 @@ def _flash_decode(*, n: int, s: int, d: int, bk: int = 512,
                         vmem_bytes=vmem, vmem_limit=vmem_limit)
 
 
+def _flash_verify(*, n: int, t: int, s: int, d: int, bk: int = 512,
+                  dtype: Any = jnp.float32,
+                  vmem_limit: int | None = None) -> DiagnosticReport:
+    """Wide-verify flash decoding (``kernels/flash_decode.flash_verify``):
+    ``flash_decode`` with ``t`` query tokens per row sharing each
+    streamed KV tile.  The [t, bk] validity mask handles causal/ragged
+    structure within the grid; the grid must cover the cache exactly,
+    and the whole t-span (queries + fp32 statistics) is VMEM-resident
+    per program."""
+    bk = min(bk, s)
+    itemsize = jnp.dtype(dtype).itemsize
+    # q span + k tile + v tile + [t, bk] mask/scores + fp32 (m, l, acc)
+    vmem = (t * d + 2 * bk * d) * itemsize + (t * bk + t * (d + 2)) * 4
+    return check_tiling("flash_verify", [TileDim("cache/bk", s, bk)],
+                        vmem_bytes=vmem, vmem_limit=vmem_limit)
+
+
 def _matmul(*, m: int, k: int, n: int, bm: int = 128, bn: int = 128,
             bk: int = 128, dtype: Any = jnp.float32,
             vmem_limit: int | None = None) -> DiagnosticReport:
@@ -201,6 +218,7 @@ def _reduction_cluster(*, shape: tuple[int, ...], n_operands: int = 2,
 KERNEL_CONTRACTS: dict[str, Callable[..., DiagnosticReport]] = {
     "flash_attention": _flash_attention,
     "flash_decode": _flash_decode,
+    "flash_verify": _flash_verify,
     "matmul": _matmul,
     "rms_norm": _rms_norm,
     "attention_template": _attention_template,

@@ -54,6 +54,11 @@ def flash_decode(q, k, v, valid, **kw):
     return _fd.flash_decode(q, k, v, valid, **kw)
 
 
+def flash_verify(q, k, v, valid, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fd.flash_verify(q, k, v, valid, **kw)
+
+
 def ssd_chunk(x, dt, A, B, C, **kw):
     kw.setdefault("interpret", _interpret())
     return _ssd.ssd_chunk(x, dt, A, B, C, **kw)

@@ -73,6 +73,19 @@ def flash_decode(q, k, v, valid, *, scale: float | None = None):
     return jnp.einsum("ns,nsd->nd", w.astype(v.dtype), v)
 
 
+def flash_verify(q, k, v, valid, *, scale: float | None = None):
+    """Wide-verify oracle.  q: [N, T, D]; k,v: [N, S, D]; valid:
+    [N, T, S] bool (per row and per query position) -> [N, T, D]."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    scores = jnp.einsum("ntd,nsd->nts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(valid, w, 0.0)
+    return jnp.einsum("nts,nsd->ntd", w.astype(v.dtype), v)
+
+
 def ssd_chunk(x, dt, A, B, C):
     """Intra-chunk SSD + end-of-chunk states (single chunk, no carry-in).
 

@@ -208,6 +208,37 @@ class LM:
             new_caches.append(nc)
         return new_caches
 
+    def supports_speculative(self) -> bool:
+        """Speculative decoding rolls rejected positions back by
+        truncating block tables, which requires every layer's cache to
+        be position-addressed through the paged pool — a sliding-window
+        ring buffer overwrites old positions in place and cannot
+        rewind.  The constraint is exactly prefix sharing's."""
+        return self.supports_prefix_sharing()
+
+    def verify_step(self, p, cache, tokens, start, count, *,
+                    block_table=None):
+        """Wide verify for speculative decoding: like ``prefill_step``
+        — per-slot token spans written at ``start[b] + t`` with a
+        ``count[b]`` validity mask — but returns logits for *every*
+        position so the engine can score all k+1 draft proposals in one
+        batched forward.  Returns ([B, T, V], cache)."""
+        cfg = self.cfg
+        x = embed(p["embed"], tokens, cfg)
+        t = tokens.shape[1]
+        positions = (jnp.asarray(start, jnp.int32)[:, None]
+                     + jnp.arange(t, dtype=jnp.int32)[None, :])
+        count = jnp.asarray(count, jnp.int32)
+        new_caches = []
+        for stage, sp, sc in zip(self.stages, p["stages"], cache):
+            x, nc = stage.prefill_chunk(sp, sc, x, positions=positions,
+                                        count=count,
+                                        block_table=block_table)
+            new_caches.append(nc)
+        h = apply_norm(p["final_norm"], x, cfg)
+        logits = unembed(h, self._head_table(p), cfg)
+        return logits, new_caches
+
     def prefill(self, p, tokens, *, max_seq: int, image_embeds=None):
         cfg = self.cfg
         x = embed(p["embed"], tokens, cfg)

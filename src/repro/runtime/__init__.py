@@ -13,14 +13,14 @@ kernel overrides, precision policy, and memory manager.
 
 from .policies import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
                        PrecisionPolicy, PrefixPolicy, ServingPolicy,
-                       resolve_dtype)
+                       SpeculativePolicy, resolve_dtype)
 from .session import Session
 from .stack import (current_session, default_session, mutate_current,
                     pop_session, push_session, session)
 
 __all__ = [
     "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
-    "PrefixPolicy",
+    "PrefixPolicy", "SpeculativePolicy",
     "CompilerPolicy", "AnalysisPolicy", "resolve_dtype",
     "session", "current_session", "default_session",
     "push_session", "pop_session", "mutate_current",

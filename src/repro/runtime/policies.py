@@ -115,6 +115,54 @@ class PrefixPolicy:
 
 
 @dataclass(frozen=True)
+class SpeculativePolicy:
+    """Speculative-decoding knobs for the paged KV cache (see
+    ``serving/speculative.py``).
+
+    enabled:
+        draft-propose-k / wide-verify decoding: a cheap proposer guesses
+        up to ``k`` tokens per slot and the target model scores all
+        proposals in one batched wide forward against the paged cache;
+        rejected suffixes roll back by truncating the slot's block
+        table.  Greedy output is token-for-token identical to one-token
+        decode.  Requires a paged cache on a model without
+        sliding-window layers (ring caches cannot roll back);
+        unsupported configurations silently degrade to plain decode.
+    k:
+        maximum tokens drafted per slot per round (the verify width is
+        ``k + 1`` — the last accepted token plus k proposals).
+    draft:
+        proposer kind — ``"ngram"`` (self-drafting suffix matcher, no
+        second model) or ``"model"`` (a small draft model passed to the
+        engine as ``draft_model`` / ``draft_params``, e.g. mamba2_370m
+        drafting for a transformer target).
+    ngram:
+        context length of the n-gram matcher (``"ngram"`` draft only):
+        propose a continuation when the last ``ngram - 1`` tokens
+        re-occur earlier in the sequence.
+    """
+
+    enabled: bool = False
+    k: int = 4
+    draft: str = "ngram"
+    ngram: int = 3
+
+    def __post_init__(self) -> None:
+        if self.draft not in ("ngram", "model"):
+            raise ValueError(f"unknown draft kind {self.draft!r}; "
+                             f"known: ('ngram', 'model')")
+        if self.k < 1:
+            raise ValueError("speculative k must be >= 1")
+
+    def replace(self, **kw) -> "SpeculativePolicy":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> dict:
+        return {"enabled": self.enabled, "k": self.k,
+                "draft": self.draft, "ngram": self.ngram}
+
+
+@dataclass(frozen=True)
 class ServingPolicy:
     """Serving-scenario knobs carried by a :class:`Session`.
 
@@ -150,6 +198,11 @@ class ServingPolicy:
         ``"least_loaded"``, ``"prefix_affinity"``; see
         ``serving/router.py``) or a ``RoutingPolicy`` instance.
         Single-engine serving ignores it.
+    speculative:
+        :class:`SpeculativePolicy` — draft-propose / wide-verify
+        decoding with block-table rollback.  Accepts a
+        ``SpeculativePolicy``, a kwargs dict, or a bare bool (``True`` =
+        defaults with speculation on).
     """
 
     cache: str = "dense"
@@ -160,6 +213,7 @@ class ServingPolicy:
     prefill_chunk: int = 16
     prefix: PrefixPolicy = PrefixPolicy()
     routing: Any = "round_robin"
+    speculative: SpeculativePolicy = SpeculativePolicy()
 
     def __post_init__(self):
         pfx = self.prefix
@@ -168,6 +222,12 @@ class ServingPolicy:
         elif isinstance(pfx, dict):
             pfx = PrefixPolicy(**pfx)
         object.__setattr__(self, "prefix", pfx)
+        spec = self.speculative
+        if isinstance(spec, bool):
+            spec = SpeculativePolicy(enabled=spec)
+        elif isinstance(spec, dict):
+            spec = SpeculativePolicy(**spec)
+        object.__setattr__(self, "speculative", spec)
 
     def replace(self, **kw) -> "ServingPolicy":
         return dataclasses.replace(self, **kw)
@@ -184,7 +244,8 @@ class ServingPolicy:
                 "allocator": self.allocator,
                 "prefill_chunk": self.prefill_chunk,
                 "prefix": self.prefix.describe(),
-                "routing": routing}
+                "routing": routing,
+                "speculative": self.speculative.describe()}
 
 
 @dataclass(frozen=True)

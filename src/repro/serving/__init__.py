@@ -1,7 +1,10 @@
+from .beam import BeamResult, beam_decode
 from .decode_attention import make_flash_decode_attend
 from .engine import Request, ServeEngine
 from .kv_cache import BlockTable, OutOfMemory, PagedKVCache
 from .prefix import PrefixIndex, PrefixNode
+from .speculative import (FixedProposer, ModelDraft, NGramProposer, Proposer,
+                          make_proposer)
 from .router import (LeastLoadedRouting, PrefixAffinityRouting,
                      RoundRobinRouting, Router, RoutingPolicy, make_routing,
                      serve, timed_stream)
@@ -14,4 +17,5 @@ __all__ = ["make_flash_decode_attend", "Request", "ServeEngine",
            "make_scheduler", "PrefixIndex", "PrefixNode",
            "RoutingPolicy", "RoundRobinRouting", "LeastLoadedRouting",
            "PrefixAffinityRouting", "make_routing", "Router", "serve",
-           "timed_stream"]
+           "timed_stream", "Proposer", "NGramProposer", "FixedProposer",
+           "ModelDraft", "make_proposer", "beam_decode", "BeamResult"]

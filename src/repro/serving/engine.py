@@ -70,7 +70,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int, max_seq: int,
-                 policy: ServingPolicy | None = None, attend_fn=None):
+                 policy: ServingPolicy | None = None, attend_fn=None,
+                 draft_model=None, draft_params=None, proposer=None):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -129,9 +130,27 @@ class ServeEngine:
 
         self._chunked = (self.policy.prefill_chunk > 0 and getattr(
             model, "supports_chunked_prefill", lambda: False)())
+        # speculative decoding needs the paged cache (rollback is block-
+        # table truncation) on a model whose layers are all position-
+        # addressed (no ring buffers); anything else silently degrades
+        # to plain one-token decode so the policy is safe globally.
+        spec = self.policy.speculative
+        self.spec_on = (spec.enabled and self.paged
+                        and getattr(model, "supports_speculative",
+                                    lambda: False)())
+        self.proposer = None
+        if self.spec_on:
+            from .speculative import make_proposer
+            self.proposer = (proposer if proposer is not None else
+                             make_proposer(spec, slots=batch_slots,
+                                           max_seq=max_seq,
+                                           draft_model=draft_model,
+                                           draft_params=draft_params))
         self.scheduler = make_scheduler(self.policy.scheduler)
         self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn) if self._chunked else None
+        self._verify = jax.jit(self._verify_fn) if self.spec_on else None
+        self._decode_logits = jax.jit(self._decode_logits_fn)
         self.active: dict[int, Request] = {}     # slot -> request
         self.slot_pos = np.zeros(batch_slots, np.int32)
         self.slot_tok = np.zeros((batch_slots, 1), np.int32)
@@ -142,6 +161,13 @@ class ServeEngine:
         self.prefill_tokens_saved = 0
         self.shared_admissions = 0
         self._admit_counter = 0
+        # speculative / beam bookkeeping
+        self.spec_rounds = 0
+        self.slot_rounds = 0     # (slot, round) verify instances
+        self.verify_calls = 0
+        self.accepted_tokens = 0
+        self.rejected_tokens = 0
+        self.fork_counts: dict[int, int] = {}    # slot -> forks taken
 
     # -- jitted bodies -------------------------------------------------------
     def _decode_fn(self, params, cache, tok, pos, block_table):
@@ -164,6 +190,30 @@ class ServeEngine:
             return self.model.prefill_step(params, cache, toks, start,
                                            count, block_table=block_table)
 
+    def _verify_fn(self, params, cache, toks, start, count, block_table):
+        # wide verify: per-slot [start, start+count) token spans written
+        # through the chunked-prefill path, greedy targets for every
+        # position argmaxed on device
+        with _rt.session(self.session):
+            logits, cache = self.model.verify_step(
+                params, cache, toks, start, count, block_table=block_table)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy, cache
+
+    def _decode_logits_fn(self, params, cache, tok, pos, block_table):
+        # beam-search body: like _decode_fn but returns full next-token
+        # log-probs so the caller can expand/score hypotheses
+        with _rt.session(self.session):
+            if block_table is None:
+                logits, cache = self.model.decode_step(
+                    params, cache, tok, pos, attend_fn=self.attend_fn)
+            else:
+                logits, cache = self.model.decode_step(
+                    params, cache, tok, pos, attend_fn=self.attend_fn,
+                    block_table=block_table)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return logp, cache
+
     def _block_table(self):
         return self.kv.device_table() if self.paged else None
 
@@ -177,9 +227,9 @@ class ServeEngine:
         """Requests queued in the scheduler (not yet admitted)."""
         return len(self.scheduler)
 
-    def _admit(self) -> None:
+    def _admit(self) -> list[tuple[int, Request, list[int], int]]:
         free = sorted(s for s in range(self.slots) if s not in self.active)
-        admitted: list[tuple[int, Request, list[int]]] = []
+        admitted: list[tuple[int, Request, list[int], int]] = []
         while free:
             req = self.scheduler.pop()
             if req is None:
@@ -250,6 +300,7 @@ class ServeEngine:
             else:
                 for slot, _req, eff, _shared in admitted:
                     self._prefill_per_token(slot, eff)
+        return admitted
 
     def _prefill_chunked(self, admitted) -> None:
         """All newly admitted slots prefill together, one jitted call per
@@ -337,6 +388,8 @@ class ServeEngine:
         req.preemptions += 1
         self.preemptions += 1
         self.kv.release(slot)
+        if self.spec_on:
+            self.proposer.release(slot)
         self._audit_kv()
         self.scheduler.requeue(req)
 
@@ -367,7 +420,16 @@ class ServeEngine:
 
     # -- stepping ---------------------------------------------------------------
     def step(self) -> list[Request]:
-        """Advance all active slots one token; returns finished requests."""
+        """Advance all active slots; returns finished requests.
+
+        Plain mode emits one token per slot per step; speculative mode
+        runs one draft-propose / wide-verify round emitting 1..k+1
+        tokens per slot (token-for-token identical output)."""
+        if self.spec_on:
+            return self._spec_step()
+        return self._plain_step()
+
+    def _plain_step(self) -> list[Request]:
         self._admit()
         if not self.active:
             return []
@@ -402,6 +464,137 @@ class ServeEngine:
         self.steps += 1
         return finished
 
+    def _spec_step(self) -> list[Request]:
+        """One draft-propose / wide-verify / rollback round.
+
+        Per active slot with last emitted token ``t`` at position ``p``
+        and proposals ``d_1..d_{c-1}``: the verify call feeds
+        ``[t, d_1..d_{c-1}]`` at positions ``p..p+c-1`` (one batched
+        forward, per-slot width via count masks) and argmaxes greedy
+        targets ``g_0..g_{c-1}``.  The accepted prefix is the longest
+        ``a`` with ``d_{i+1} == g_i``; the slot emits ``d_1..d_a, g_a``
+        — every emitted token equals what sequential greedy decode
+        would have produced, which is the identity guarantee.  KV for
+        the rejected suffix rolls back by block-table truncation.
+        """
+        admitted = self._admit()
+        for slot, _req, eff, _shared in admitted:
+            n = len(eff) - 1
+            # prefill wrote positions [0, n); the audit treats anything
+            # held beyond that without a declared write intent as
+            # rollback debris, so record both
+            self.kv.set_committed(slot, n)
+            if slot not in self.kv._prepared:
+                self.kv.begin_write(slot, max(n - 1, 0), max(n - 1, 0))
+            self.proposer.admit(slot, eff)
+        if not self.active:
+            return []
+        k = self.policy.speculative.k
+        width = k + 1
+        contexts = {s: r.prompt + r.generated
+                    for s, r in self.active.items()}
+        proposals = self.proposer.propose(contexts, k)
+        counts: dict[int, tuple[int, list[int]]] = {}
+        for s in list(self.active):
+            props = [int(t) for t in proposals.get(s, [])][:k]
+            # verify writes positions p..p+c-1; clamp inside the cache
+            c = min(len(props) + 1, width,
+                    self.max_seq - int(self.slot_pos[s]))
+            counts[s] = (c, props[:c - 1])
+        # grow + COW ahead of the wide write; the write intent is
+        # declared *before* ensure so a mid-growth preemption audit
+        # sees intended blocks, not dangling ones
+        for slot in sorted(self.active):
+            while slot in self.active:
+                p = int(self.slot_pos[slot])
+                hi = p + counts[slot][0] - 1
+                try:
+                    self.kv.begin_write(slot, p, hi)
+                    self.kv.ensure(slot, hi)
+                    self.cache = self.kv.prepare_write(slot, p, hi,
+                                                       self.cache)
+                    break
+                except OutOfMemory:
+                    others = {s: r for s, r in self.active.items()
+                              if s != slot}
+                    if not others:
+                        self._preempt(slot)
+                        raise
+                    self._preempt(self.scheduler.choose_victim(others))
+        if not self.active:
+            return []
+        toks = np.zeros((self.slots, width), np.int32)
+        start = np.zeros(self.slots, np.int32)
+        count = np.zeros(self.slots, np.int32)
+        for s in self.active:
+            c, props = counts[s]
+            span = [int(self.slot_tok[s, 0])] + props
+            toks[s, :c] = span[:c]
+            start[s] = self.slot_pos[s]
+            count[s] = c
+        greedy, self.cache = self._verify(self.params, self.cache,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(start),
+                                          jnp.asarray(count),
+                                          self._block_table())
+        self.verify_calls += 1
+        self.spec_rounds += 1
+        self.slot_rounds += len(self.active)
+        g = np.asarray(greedy)
+        now = time.time()
+        finished = []
+        accepted_map: dict[int, int] = {}
+        for slot, req in list(self.active.items()):
+            _c, props = counts[slot]
+            a = 0
+            while a < len(props) and props[a] == int(g[slot, a]):
+                a += 1
+            emit = props[:a] + [int(g[slot, a])]
+            accepted_map[slot] = a
+            self.accepted_tokens += a
+            self.rejected_tokens += len(props) - a
+            p0 = int(self.slot_pos[slot])
+            done = False
+            n_emit = 0
+            for t in emit:
+                req.generated.append(t)
+                n_emit += 1
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                if ((req.eos_id is not None and t == req.eos_id)
+                        or len(req.generated) >= req.max_new_tokens
+                        or p0 + n_emit >= self.max_seq - 1):
+                    done = True
+                    break
+            new_pos = p0 + n_emit
+            self.slot_pos[slot] = new_pos
+            self.slot_tok[slot, 0] = emit[n_emit - 1]
+            # truncate the rejected suffix: KV past new_pos-1 is
+            # either unwritten (the bonus token) or rejected content
+            self.kv.rollback(slot, new_pos)
+            if done:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                self.kv.release(slot)
+                self.proposer.release(slot)
+                self._audit_kv()
+        self.proposer.commit(accepted_map)
+        self.steps += 1
+        return finished
+
+    # -- beam forking --------------------------------------------------------
+    def fork(self, src: int, dst: int) -> None:
+        """Clone slot ``src``'s sequence state into free slot ``dst``:
+        block table refcount++ per block, copy-on-write on the first
+        divergent write (see ``serving/beam.py`` for the consumer)."""
+        if not self.paged:
+            raise ValueError("fork() requires the paged KV cache")
+        self.kv.fork(src, dst)
+        self.slot_pos[dst] = self.slot_pos[src]
+        self.slot_tok[dst] = self.slot_tok[src]
+        self.fork_counts[src] = self.fork_counts.get(src, 0) + 1
+
     def run_until_done(self, max_steps: int = 10000) -> list[Request]:
         out = []
         for _ in range(max_steps):
@@ -422,6 +615,22 @@ class ServeEngine:
              "prefix_sharing": self.prefix_on,
              "prefill_tokens_saved": self.prefill_tokens_saved,
              "shared_admissions": self.shared_admissions}
+        spec = {"enabled": self.spec_on,
+                "rounds": self.spec_rounds,
+                "slot_rounds": self.slot_rounds,
+                "verify_calls": self.verify_calls,
+                "accepted_tokens": self.accepted_tokens,
+                "rejected_tokens": self.rejected_tokens,
+                # mean tokens a slot emits per verify round, in
+                # [1, k + 1] (one-token decode is exactly 1.0) — the
+                # speculative speedup knob
+                "accepted_per_step": round(
+                    (self.accepted_tokens + self.slot_rounds)
+                    / max(1, self.slot_rounds), 3)}
+        if self.proposer is not None:
+            spec["proposer"] = self.proposer.describe()
+        d["speculative"] = spec
+        d["fork_counts"] = dict(self.fork_counts)
         if self.paged:
             d["kv_cache"] = self.kv.describe()
         return d

@@ -129,6 +129,16 @@ class PagedKVCache:
         # registrant's own prefill — is fine)
         self._prepared: dict[int, tuple[int, int]] = {}
         self._pending: dict[int, list[PrefixNode]] = {}  # pre-ready nodes
+        # -- speculative decoding / forking ----------------------------------
+        # committed[slot] = positions whose KV content is final; anything a
+        # slot holds past blocks_for(committed-1) that is not covered by a
+        # declared write intent (_prepared) is rollback debris the audit
+        # flags (kv.rollback-dangling).  Only speculative engines maintain
+        # this — plain decode never rolls back, so the map stays empty.
+        self._committed: dict[int, int] = {}
+        self._forks: dict[int, int] = {}          # child slot -> parent slot
+        self.rollback_blocks_freed = 0
+        self.forks = 0
         self._leaf_axes_cache: list[int | None] | None = None
         self.cow_copies = 0
         # reserve physical block 0 as the trash block, never freed
@@ -223,10 +233,84 @@ class PagedKVCache:
         self.table[slot] = 0
         self._shared_len.pop(slot, None)
         self._prepared.pop(slot, None)
+        self._committed.pop(slot, None)
+        self._forks.pop(slot, None)
+        # a released parent orphans its children: they own their blocks
+        # (refcounted) and stop being audited as forks of a dead slot
+        for child, parent in list(self._forks.items()):
+            if parent == slot:
+                del self._forks[child]
         if self.prefix_index is not None and not self.prefix.retain:
             for bid in self.prefix_index.sweep(
                     lambda b: self.refcount.get(b, 0) == 1):
                 self._decref(bid)
+
+    # -- speculative rollback / forking --------------------------------------
+    def set_committed(self, slot: int, n: int) -> None:
+        """Record that positions ``[0, n)`` hold final KV content for
+        ``slot`` (speculative engines call this at admission and after
+        every verify round; the rollback audit keys off it)."""
+        self._committed[slot] = n
+
+    def begin_write(self, slot: int, lo: int, hi: int) -> None:
+        """Declare an upcoming write to positions ``[lo, hi]`` *before*
+        growing the mapping — so an audit triggered mid-growth (a
+        preemption freeing room for this very span) sees the extra
+        blocks as intended, not as rollback debris."""
+        self._prepared[slot] = (lo, hi)
+
+    def rollback(self, slot: int, new_len: int) -> int:
+        """Truncate ``slot`` to ``new_len`` committed positions.
+
+        The speculative-decoding rejection path: verify wrote K/V for
+        the whole proposed span, acceptance kept a prefix, and the
+        surplus *blocks* return to the memory manager (refcount-aware —
+        a block other sharers or the radix tree still reference only
+        decrefs).  Positions inside the last kept block need no cleanup:
+        the decode validity mask hides them and future writes overwrite
+        them.  Returns the number of block references dropped.
+        """
+        held = self._blocks.get(slot, [])
+        keep = 0 if new_len <= 0 else (new_len - 1) // self.block_size + 1
+        freed = 0
+        while len(held) > keep:
+            bid, _ptr = held.pop()
+            self.table[slot, len(held)] = 0
+            self._decref(bid)
+            freed += 1
+        self._committed[slot] = new_len
+        if slot in self._prepared:
+            lo, hi = self._prepared[slot]
+            if lo >= new_len:
+                del self._prepared[slot]
+            elif hi >= new_len:
+                self._prepared[slot] = (lo, new_len - 1)
+        self.rollback_blocks_freed += freed
+        return freed
+
+    def fork(self, src: int, dst: int) -> None:
+        """Clone ``src``'s block table into pristine slot ``dst``.
+
+        Every mapped block gains a reference; nothing is copied — the
+        first divergent write through :meth:`prepare_write` triggers
+        copy-on-write for whichever sequence writes first.  This is the
+        beam-search primitive: a fork costs O(blocks) refcount bumps.
+        """
+        if self._blocks.get(dst):
+            raise ValueError(f"fork() into non-empty slot {dst}")
+        held = self._blocks.get(src, [])
+        self._blocks[dst] = list(held)
+        for bid, _ptr in held:
+            self.refcount[bid] = self.refcount.get(bid, 0) + 1
+        self.table[dst] = 0
+        self.table[dst, :len(held)] = self.table[src, :len(held)]
+        # the child inherits the parent's shared-prefix semantics: any
+        # write past it into a still-shared block must COW
+        self._shared_len[dst] = self._shared_len.get(src, 0)
+        if src in self._committed:
+            self._committed[dst] = self._committed[src]
+        self._forks[dst] = src
+        self.forks += 1
 
     # -- prefix sharing ------------------------------------------------------
     def admit(self, slot: int, tokens: list[int]) -> int:
@@ -295,7 +379,7 @@ class PagedKVCache:
         self._prepared[slot] = (lo, hi)
         held = self._blocks.get(slot)
         shared = self._shared_len.get(slot, 0)
-        if self.prefix_index is not None and held and hi >= shared:
+        if held and hi >= shared:
             for j in range(max(lo, shared) // self.block_size,
                            min(hi // self.block_size, len(held) - 1) + 1):
                 bid = held[j][0]
@@ -405,7 +489,9 @@ class PagedKVCache:
              "blocks_in_use": self.blocks_in_use,
              "manager": type(self.manager).__name__,
              "device_allocs": s.n_device_allocs,
-             "internal_fragmentation": s.internal_fragmentation}
+             "internal_fragmentation": s.internal_fragmentation,
+             "rollback_blocks_freed": self.rollback_blocks_freed,
+             "forks": self.forks}
         if self.prefix_index is not None:
             d["prefix"] = {**self.prefix_index.describe(),
                            "cow_copies": self.cow_copies,

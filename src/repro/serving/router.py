@@ -226,11 +226,23 @@ class Router:
 
     # -- provenance ----------------------------------------------------------
     def describe(self) -> dict:
+        per_engine = [e.describe() for e in self.engines]
+        spec = {"accepted_tokens": 0, "rejected_tokens": 0,
+                "spec_rounds": 0, "rollback_blocks_freed": 0, "forks": 0}
+        for d in per_engine:
+            s = d.get("speculative", {})
+            spec["accepted_tokens"] += s.get("accepted_tokens", 0)
+            spec["rejected_tokens"] += s.get("rejected_tokens", 0)
+            spec["spec_rounds"] += s.get("rounds", 0)
+            kv = d.get("kv_cache", {})
+            spec["rollback_blocks_freed"] += kv.get("rollback_blocks_freed", 0)
+            spec["forks"] += kv.get("forks", 0)
         return {"replicas": len(self.engines),
                 "routing": self.routing.name,
                 "steps": self.steps,
                 "placement": {uid: i for uid, i in sorted(self.routed.items())},
-                "engines": [e.describe() for e in self.engines]}
+                "speculative": spec,
+                "engines": per_engine}
 
 
 def serve(model, params, stream: Stream, *, replicas: int = 2,

@@ -1,0 +1,282 @@
+"""Draft proposers for speculative decoding on the paged KV cache.
+
+The engine's speculative loop (``ServeEngine._spec_step``) is
+draft-propose / wide-verify / rollback:
+
+1. a *proposer* guesses up to ``k`` next tokens per active slot,
+2. the target model scores the last accepted token plus all proposals
+   in one batched wide forward (``LM.verify_step`` — per-slot variable
+   width spans, exactly the chunked-prefill write semantics),
+3. the longest proposal prefix matching the target's own greedy argmax
+   is accepted, one bonus token comes free from the verify logits, and
+   the rejected suffix *rolls back* by truncating the slot's block
+   table (``PagedKVCache.rollback``) — whole rejected blocks return to
+   the memory manager.
+
+The acceptance rule makes greedy speculative decoding token-for-token
+identical to one-token decode regardless of proposal quality; proposers
+only change *speed* (accepted tokens per verify call), never output.
+
+Proposers
+---------
+``NGramProposer``
+    Self-drafting: re-occurrences of the current suffix earlier in the
+    sequence predict its continuation.  Zero model calls, zero state —
+    the cheap default that wins whenever decoding is locally repetitive
+    (code, structured text, greedy cycles).
+``ModelDraft``
+    A second, smaller model (paired from ``src/repro/configs/`` — e.g.
+    mamba2 drafting for a transformer target) decodes ``k`` tokens ahead
+    against its own dense cache.  Rollback on the draft side is cache
+    *snapshot selection*: the k+1 draft steps each snapshot the cache,
+    and ``commit`` merges, per batch row, the snapshot matching that
+    slot's accepted length.
+``FixedProposer``
+    Test hook: proposals come from a callable ``fn(context) -> tokens``
+    (an oracle replaying the baseline output hits acceptance == k;
+    a constant wrong token hits acceptance == 0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Proposer:
+    """Base proposer: stateless, proposes nothing (plain decode)."""
+
+    def admit(self, slot: int, prompt: list[int]) -> None:
+        """A request landed in ``slot`` with effective prompt
+        ``prompt`` (original prompt + tokens generated before a
+        preemption); stateful proposers catch their cache up here."""
+
+    def release(self, slot: int) -> None:
+        """The slot finished or was preempted; drop its state."""
+
+    def propose(self, contexts: dict[int, list[int]],
+                k: int) -> dict[int, list[int]]:
+        """Per-slot draft continuations (0..k tokens each).
+
+        ``contexts[slot]`` is the full token context — prompt plus
+        everything generated — whose last element is the engine's
+        ``slot_tok`` (emitted, KV not yet written)."""
+        return {s: [] for s in contexts}
+
+    def commit(self, accepted: dict[int, int]) -> None:
+        """Verify outcome for the round's slots: ``accepted[slot]`` of
+        the proposals were kept (plus the free bonus token, which the
+        next round feeds back as the slot's last token)."""
+
+    def describe(self) -> dict:
+        return {"kind": type(self).__name__}
+
+
+class NGramProposer(Proposer):
+    """Suffix-matching self-drafter.
+
+    Looks for the most recent earlier occurrence of the context's last
+    ``n-1`` tokens (falling back to shorter suffixes down to 1) and
+    proposes the tokens that followed it.  Wrong proposals cost nothing
+    but rejected verify width, so matching aggressively is safe.
+    """
+
+    def __init__(self, n: int = 3):
+        self.n = max(2, int(n))
+
+    def propose(self, contexts: dict[int, list[int]],
+                k: int) -> dict[int, list[int]]:
+        return {s: self._match(ctx, k) for s, ctx in contexts.items()}
+
+    def _match(self, ctx: list[int], k: int) -> list[int]:
+        size = len(ctx)
+        for m in range(min(self.n - 1, size - 1), 0, -1):
+            tail = ctx[size - m:]
+            # latest candidate start leaving >= 1 follower token
+            for i in range(size - m - 1, -1, -1):
+                if ctx[i:i + m] == tail:
+                    return ctx[i + m:i + m + k]
+        return []
+
+    def describe(self) -> dict:
+        return {"kind": "NGramProposer", "n": self.n}
+
+
+class FixedProposer(Proposer):
+    """Proposals from a callable ``fn(context) -> list[int]``."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def propose(self, contexts: dict[int, list[int]],
+                k: int) -> dict[int, list[int]]:
+        return {s: list(self.fn(ctx))[:k] for s, ctx in contexts.items()}
+
+
+class ModelDraft(Proposer):
+    """Draft-model proposer with snapshot-selection rollback.
+
+    The draft keeps a dense cache sized like the target engine (slot
+    for slot) and mirrors the engine's position bookkeeping: before a
+    round, the draft has consumed everything up to but excluding the
+    engine's ``slot_tok``.  One round runs ``k + 1`` batched draft
+    decode steps — feed ``slot_tok``, then each argmax — snapshotting
+    the (immutable) cache after each.  ``commit(accepted)`` then
+    rebuilds the cache per batch row from the snapshot matching that
+    slot's accepted length: rows of slots that accepted ``a`` proposals
+    take snapshot ``a`` (consumed ``slot_tok, d_1..d_a``), idle rows
+    keep the pre-round cache.  Rollback on the draft side is therefore
+    a where-select, no recompute.
+
+    Mid-flight admission catch-up feeds the new slot's prompt one token
+    at a time through the same batched step and then merges *only that
+    row* back — whatever those calls did to other rows (including SSM
+    recurrent state, which is why mamba2 works as a draft here) is
+    discarded by the merge.
+    """
+
+    def __init__(self, model, params, *, slots: int, max_seq: int):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(slots, max_seq)
+        self.pos = np.zeros(slots, np.int32)
+        self.draft_calls = 0
+        self._axes: list[int] | None = None
+        self._step = jax.jit(self._step_fn)
+        self._round = None      # (base cache, snapshots, active slots)
+
+    def _step_fn(self, params, cache, tok, pos):
+        logits, cache = self.model.decode_step(params, cache, tok, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    # -- per-leaf batch axis (structural) ------------------------------------
+    def _batch_axes(self) -> list[int]:
+        """Batch axis of every cache leaf, derived by diffing specs at
+        ``slots`` vs ``slots + 1`` (scan-stacked layers prepend a layer
+        axis, so the batch lands at axis 1 there)."""
+        if self._axes is not None:
+            return self._axes
+        a = jax.tree_util.tree_leaves(
+            self.model.cache_spec(self.slots, self.max_seq))
+        b = jax.tree_util.tree_leaves(
+            self.model.cache_spec(self.slots + 1, self.max_seq))
+        axes = []
+        for la, lb in zip(a, b):
+            sa, sb = tuple(la.shape), tuple(lb.shape)
+            hits = [ax for ax in (0, 1)
+                    if len(sa) > ax
+                    and sb == sa[:ax] + (self.slots + 1,) + sa[ax + 1:]]
+            if len(hits) != 1:
+                raise ValueError(
+                    f"cannot identify batch axis for draft cache leaf "
+                    f"{sa} vs {sb}; candidates: {hits}")
+            axes.append(hits[0])
+        self._axes = axes
+        return axes
+
+    def _select_rows(self, mask: np.ndarray, new, old):
+        """Per-leaf ``where`` along the batch axis: rows where ``mask``
+        is set come from ``new``, the rest from ``old``."""
+        m = jnp.asarray(mask)
+        leaves_new, treedef = jax.tree_util.tree_flatten(new)
+        leaves_old = jax.tree_util.tree_leaves(old)
+        out = []
+        for ln, lo, ax in zip(leaves_new, leaves_old, self._batch_axes()):
+            shape = [1] * ln.ndim
+            shape[ax] = m.shape[0]
+            out.append(jnp.where(m.reshape(shape), ln, lo))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- lifecycle -----------------------------------------------------------
+    def admit(self, slot: int, prompt: list[int]) -> None:
+        mask = np.zeros(self.slots, bool)
+        mask[slot] = True
+        saved = self.cache
+        # fresh recurrent/attention state for the recycled row, then
+        # consume prompt[:-1]; the engine's slot_tok (= prompt[-1]) is
+        # fed by the first propose round, mirroring the target
+        work = self._select_rows(
+            mask, jax.tree_util.tree_map(jnp.zeros_like, saved), saved)
+        tok = np.zeros((self.slots, 1), np.int32)
+        pos = np.zeros(self.slots, np.int32)
+        for i, t in enumerate(prompt[:-1]):
+            tok[slot, 0] = t
+            pos[slot] = i
+            _, work = self._step(self.params, work, jnp.asarray(tok),
+                                 jnp.asarray(pos))
+            self.draft_calls += 1
+        self.cache = self._select_rows(mask, work, saved)
+        self.pos[slot] = len(prompt) - 1
+
+    def release(self, slot: int) -> None:
+        self.pos[slot] = 0      # row content is garbage until next admit
+
+    # -- propose / commit ----------------------------------------------------
+    def propose(self, contexts: dict[int, list[int]],
+                k: int) -> dict[int, list[int]]:
+        active = sorted(contexts)
+        base = self.cache
+        tok = np.zeros((self.slots, 1), np.int32)
+        pos = np.zeros(self.slots, np.int32)
+        for s in active:
+            tok[s, 0] = contexts[s][-1]
+            pos[s] = self.pos[s]
+        snaps = []
+        cur = base
+        out: dict[int, list[int]] = {s: [] for s in active}
+        # k+1 steps: the last produces the snapshot for acceptance == k
+        # (its logits are never used)
+        for i in range(k + 1):
+            nxt, cur = self._step(self.params, cur, jnp.asarray(tok),
+                                  jnp.asarray(pos))
+            self.draft_calls += 1
+            snaps.append(cur)
+            if i < k:
+                nxt_np = np.asarray(nxt)
+                for s in active:
+                    out[s].append(int(nxt_np[s]))
+                    tok[s, 0] = nxt_np[s]
+                    pos[s] += 1
+        self._round = (base, snaps, active)
+        return out
+
+    def commit(self, accepted: dict[int, int]) -> None:
+        if self._round is None:
+            return
+        base, snaps, active = self._round
+        self._round = None
+        new = base
+        for i, snap in enumerate(snaps):
+            mask = np.zeros(self.slots, bool)
+            for s in active:
+                if accepted.get(s, 0) >= i:
+                    mask[s] = True
+            if mask.any():
+                new = self._select_rows(mask, snap, new)
+        self.cache = new
+        for s in active:
+            if s in accepted:
+                self.pos[s] += accepted[s] + 1
+
+    def describe(self) -> dict:
+        return {"kind": "ModelDraft",
+                "arch": getattr(self.model.cfg, "name", None),
+                "draft_calls": self.draft_calls}
+
+
+def make_proposer(spec, *, slots: int, max_seq: int,
+                  draft_model=None, draft_params=None) -> Proposer:
+    """Build the proposer a :class:`~repro.runtime.SpeculativePolicy`
+    asks for.  ``draft="model"`` needs the engine's ``draft_model`` /
+    ``draft_params`` constructor arguments."""
+    if spec.draft == "model":
+        if draft_model is None or draft_params is None:
+            raise ValueError(
+                "SpeculativePolicy(draft='model') requires "
+                "ServeEngine(draft_model=..., draft_params=...)")
+        return ModelDraft(draft_model, draft_params,
+                          slots=slots, max_seq=max_seq)
+    return NGramProposer(spec.ngram)

@@ -330,6 +330,7 @@ def test_kernel_contracts_clean_on_shipped_defaults():
     cases = [
         ("flash_attention", dict(b=2, h=4, s=1024, d=64)),
         ("flash_decode", dict(n=8, s=2048, d=64)),
+        ("flash_verify", dict(n=8, t=5, s=2048, d=64)),
         ("matmul", dict(m=512, k=512, n=512)),
         ("rms_norm", dict(n=1024, d=512)),
     ]

@@ -127,6 +127,41 @@ def test_flash_decode_per_row_valid():
                                    np.asarray(shared), **_tol(jnp.float32))
 
 
+@pytest.mark.parametrize("s,t,d,bk", [(256, 5, 64, 64), (512, 3, 128, 128),
+                                      (128, 1, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_verify_sweep(s, t, d, bk, dtype):
+    """Wide-verify: t query positions per row over a shared KV stream,
+    per-(row, position) causal/ragged validity."""
+    n = 4
+    q = _rand((n, t, d), dtype)
+    k = _rand((n, s, d), dtype)
+    v = _rand((n, s, d), dtype)
+    # row i starts at depth start_i; query j attends positions
+    # <= start_i + j (the verify span's staircase mask)
+    starts = jnp.asarray([1, 40, 100, s - t], jnp.int32)
+    valid = (jnp.arange(s)[None, None, :]
+             <= starts[:, None, None] + jnp.arange(t)[None, :, None])
+    out = K.flash_verify(q, k, v, valid, bk=bk)
+    ref = R.flash_verify(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_verify_t1_matches_flash_decode():
+    """flash_decode is the T=1 special case of flash_verify."""
+    n, s, d = 5, 256, 64
+    q = _rand((n, d), jnp.float32)
+    k = _rand((n, s, d), jnp.float32)
+    v = _rand((n, s, d), jnp.float32)
+    lens = jnp.asarray([1, 64, 100, 200, 256])
+    valid = jnp.arange(s)[None, :] < lens[:, None]
+    wide = K.flash_verify(q[:, None, :], k, v, valid[:, None, :], bk=64)
+    narrow = K.flash_decode(q, k, v, valid, bk=64)
+    np.testing.assert_allclose(np.asarray(wide[:, 0]), np.asarray(narrow),
+                               rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("q,p,n", [(32, 16, 24), (64, 32, 16), (16, 64, 128)])
 def test_ssd_chunk_sweep(q, p, n):
     b, h, nc = 2, 3, 4

@@ -352,7 +352,9 @@ def test_serving_policy_lands_in_session_describe(tiny):
                             "allocator": "caching", "prefill_chunk": 16,
                             "prefix": {"enabled": False, "retain": True,
                                        "partial": True},
-                            "routing": "round_robin"}
+                            "routing": "round_robin",
+                            "speculative": {"enabled": False, "k": 4,
+                                            "draft": "ngram", "ngram": 3}}
     # explicit policy argument overrides the session and is recorded
     eng2 = ServeEngine(model, params, batch_slots=1, max_seq=32,
                        policy=ServingPolicy(cache="dense"))

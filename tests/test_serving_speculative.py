@@ -1,0 +1,367 @@
+"""Speculative + wide decoding on the paged KV cache.
+
+The acceptance rule (longest proposal prefix matching the target's own
+greedy argmax, plus one bonus token from the verify logits) makes
+speculative decoding invisible in the tokens: any proposer — n-gram
+self-draft, a mamba2 draft model, an oracle, or an adversary — must
+decode bit-identically to one-token decode, while rejected suffixes
+roll back by truncating the slot's block table.  Beam search rides the
+same machinery: ``fork`` is a refcounted block-table clone, divergent
+writes copy-on-write.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.configs.base import get_config
+from repro.models import build_model
+from repro.runtime import AnalysisPolicy, ServingPolicy, SpeculativePolicy
+from repro.serving import (FixedProposer, ModelDraft, NGramProposer,
+                           Request, Router, ServeEngine, beam_decode)
+
+PROMPTS = [[3, 1, 4, 1, 5], [9, 2], [5, 3, 5, 8, 9, 7, 2], [2, 7, 1, 8]]
+
+BASE = ServingPolicy(cache="paged", block_size=4, prefill_chunk=8)
+SPEC = BASE.replace(speculative={"enabled": True, "k": 4})
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("codeqwen1.5-7b", reduced=True, n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def tiny_cached(tiny):
+    # hypothesis re-runs the test body; reuse the module model
+    return tiny
+
+
+def _run(model, params, policy, prompts=PROMPTS, max_new=12, slots=4,
+         max_seq=64, stagger=False, **kw):
+    eng = ServeEngine(model, params, batch_slots=slots, max_seq=max_seq,
+                      policy=policy, **kw)
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    if stagger:
+        eng.submit(reqs[0])
+        eng.step()
+        eng.step()
+        for r in reqs[1:]:
+            eng.submit(r)
+    else:
+        for r in reqs:
+            eng.submit(r)
+    done = {r.uid: r.generated for r in eng.run_until_done()}
+    return done, eng
+
+
+def _oracle(ref, prompts):
+    """Replay the reference continuation: acceptance == k every round."""
+    seqs = [list(p) + list(ref[uid]) for uid, p in enumerate(prompts)]
+
+    def fn(ctx):
+        n = len(ctx)
+        for seq in seqs:
+            if len(seq) >= n and seq[:n] == ctx:
+                return seq[n:]
+        return []
+    return FixedProposer(fn)
+
+
+def _adversary(ref, prompts, k):
+    """Propose exactly the wrong token: acceptance == 0 every round."""
+    seqs = [list(p) + list(ref[uid]) for uid, p in enumerate(prompts)]
+
+    def fn(ctx):
+        n = len(ctx)
+        for seq in seqs:
+            if len(seq) > n and seq[:n] == ctx:
+                return [(seq[n] + 1) % 64] * k
+        return []
+    return FixedProposer(fn)
+
+
+# -- greedy identity across drafts --------------------------------------------
+
+
+def test_ngram_speculative_identical_to_plain(tiny):
+    """The tentpole regression: n-gram self-drafting with wide verify
+    and rollback emits exactly the one-token greedy stream."""
+    model, params = tiny
+    with repro.session(analysis=AnalysisPolicy(level="strict")):
+        ref, _ = _run(model, params, BASE, stagger=True)
+        out, eng = _run(model, params, SPEC, stagger=True)
+    assert out == ref
+    d = eng.describe()["speculative"]
+    assert d["enabled"] and d["verify_calls"] > 0
+    assert d["proposer"]["kind"] == "NGramProposer"
+    assert eng.decode_calls == 0          # every step went through verify
+    assert eng.kv.blocks_in_use == 0
+    assert not eng.kv.audit().diagnostics
+
+
+def test_model_draft_identical_to_plain(tiny):
+    """A mamba2 (SSM) draft model proposing for the transformer target:
+    snapshot-selection rollback on the draft side, token identity."""
+    model, params = tiny
+    dcfg = get_config("mamba2-370m", reduced=True, n_layers=2, d_model=64,
+                      vocab_size=64)
+    dmodel = build_model(dcfg)
+    dparams = dmodel.init(jax.random.PRNGKey(1))
+    spec = BASE.replace(speculative={"enabled": True, "k": 3,
+                                     "draft": "model"})
+    ref, _ = _run(model, params, BASE, stagger=True)
+    out, eng = _run(model, params, spec, stagger=True,
+                    draft_model=dmodel, draft_params=dparams)
+    assert out == ref
+    prop = eng.describe()["speculative"]["proposer"]
+    assert prop["kind"] == "ModelDraft" and prop["draft_calls"] > 0
+    assert eng.kv.blocks_in_use == 0
+
+
+def test_model_draft_requires_draft_model(tiny):
+    model, params = tiny
+    spec = BASE.replace(speculative={"enabled": True, "draft": "model"})
+    with pytest.raises(ValueError, match="draft_model"):
+        ServeEngine(model, params, batch_slots=2, max_seq=32, policy=spec)
+
+
+# -- acceptance extremes ------------------------------------------------------
+
+
+def test_oracle_draft_accepts_k_per_round(tiny):
+    """A perfect draft accepts all k proposals each round — many tokens
+    per verify call, no rollback churn beyond sequence tails."""
+    model, params = tiny
+    ref, plain = _run(model, params, BASE)
+    out, eng = _run(model, params, SPEC,
+                    proposer=_oracle(ref, PROMPTS))
+    assert out == ref
+    d = eng.describe()["speculative"]
+    assert d["accepted_per_step"] > 2.0
+    assert d["verify_calls"] < plain.decode_calls
+    assert d["rejected_tokens"] == 0
+
+
+def test_adversarial_draft_accepts_zero(tiny):
+    """Proposals that are always wrong: acceptance 0, one bonus token
+    per round (== plain decode rate), every proposal's KV rolled back —
+    and the output stream still identical."""
+    model, params = tiny
+    ref, _ = _run(model, params, BASE)
+    out, eng = _run(model, params, SPEC,
+                    proposer=_adversary(ref, PROMPTS, k=4))
+    assert out == ref
+    d = eng.describe()["speculative"]
+    assert d["accepted_tokens"] == 0
+    assert d["rejected_tokens"] > 0
+    # rejected suffixes crossed block boundaries: blocks actually freed
+    assert eng.kv.rollback_blocks_freed > 0
+    assert eng.kv.blocks_in_use == 0
+    assert not eng.kv.audit().diagnostics
+
+
+# -- random proposals (property) ----------------------------------------------
+
+
+_REF = {}
+
+
+def _plain_ref(model, params):
+    key = id(params)
+    if key not in _REF:
+        _REF[key] = _run(model, params, BASE, max_new=8, stagger=True)[0]
+    return _REF[key]
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=1, max_value=40),
+       k=st.integers(min_value=1, max_value=5))
+def test_random_proposals_are_invisible(tiny_cached, seed, k):
+    """Property: arbitrary (deterministic-per-context) proposal streams
+    under staggered admissions never change the greedy output."""
+    model, params = tiny_cached
+    ref = _plain_ref(model, params)
+
+    def fn(ctx):
+        r = np.random.default_rng((seed * 1009 + 31 * len(ctx)
+                                   + ctx[-1]) % (2 ** 31))
+        return [int(t) for t in r.integers(0, 64,
+                                           size=int(r.integers(0, k + 1)))]
+
+    pol = BASE.replace(speculative={"enabled": True, "k": k})
+    out, eng = _run(model, params, pol, max_new=8, stagger=True,
+                    proposer=FixedProposer(fn))
+    assert out == ref
+    assert not eng.kv.audit().diagnostics
+
+
+# -- preemption mid-speculation -----------------------------------------------
+
+
+def test_preempt_mid_speculation_requeues_identically(tiny):
+    """A victim evicted between speculative rounds loses its blocks and
+    its proposer state; re-admission must catch both up — same tokens
+    as the uncontended plain run."""
+    model, params = tiny
+    base = dict(cache="paged", block_size=4, prefill_chunk=8,
+                num_blocks=9)                       # tight pool: preempts
+    with repro.session(analysis=AnalysisPolicy(level="strict")):
+        ref, eoff = _run(model, params, ServingPolicy(**base),
+                         max_new=14, slots=3)
+        out, eon = _run(model, params,
+                        ServingPolicy(**base, speculative={"enabled": True,
+                                                           "k": 4}),
+                        max_new=14, slots=3)
+    assert out == ref
+    assert eon.preemptions + eoff.preemptions > 0   # pressure actually hit
+    assert eon.kv.blocks_in_use == 0
+
+
+# -- composition with prefix sharing ------------------------------------------
+
+
+def test_speculation_composes_with_prefix_sharing(tiny):
+    """Speculative decode over admissions that mapped shared radix
+    blocks: COW guards the shared prefix, rollback only ever truncates
+    past it, output identical to the plain sharing-off run."""
+    model, params = tiny
+    sys = [7, 3, 11, 5, 2, 13, 17, 1, 9, 4, 23, 6, 29, 8, 31, 10]
+    prompts = [sys + [40 + i, 50 + i] for i in range(4)]
+    with repro.session(analysis=AnalysisPolicy(level="strict")):
+        ref, _ = _run(model, params, BASE, prompts=prompts, stagger=True)
+        out, eng = _run(model, params,
+                        SPEC.replace(prefix=True), prompts=prompts,
+                        stagger=True)
+    assert out == ref
+    assert eng.prefill_tokens_saved > 0
+    assert eng.describe()["speculative"]["verify_calls"] > 0
+    assert eng.kv.blocks_in_use == 0
+    eng.kv.clear_prefix()
+    assert eng.kv.refcount == {}
+    assert not eng.kv.audit().diagnostics
+
+
+# -- beam search --------------------------------------------------------------
+
+
+def _ref_beam(model, params, prompt, width, max_new, max_seq=64):
+    """Independent beam-search reference: teacher-forced scoring with a
+    fresh dense cache per hypothesis — no forks, no block tables."""
+    def logprobs(seq):
+        cache = model.init_cache(1, max_seq)
+        logits = None
+        for i, t in enumerate(seq):
+            logits, cache = model.decode_step(
+                params, cache, jnp.asarray([[t]], jnp.int32),
+                jnp.asarray([i], jnp.int32))
+        return np.asarray(jax.nn.log_softmax(
+            logits[0].astype(jnp.float32)))
+
+    beams = [([], 0.0)]
+    for _ in range(max_new):
+        cands = []
+        for toks, score in beams:
+            lp = logprobs(list(prompt) + toks)
+            for t in np.argsort(-lp, kind="stable")[:width]:
+                cands.append((score + float(lp[t]), toks + [int(t)]))
+        cands.sort(key=lambda c: -c[0])
+        beams = [(t, s) for s, t in cands[:width]]
+    return beams
+
+
+def test_beam_matches_bruteforce_reference(tiny):
+    """Engine beam search (COW forks over KV slots) must find the same
+    hypotheses and scores as teacher-forced re-scoring from scratch."""
+    model, params = tiny
+    prompt = [3, 1, 4, 1, 5]
+    eng = ServeEngine(model, params, batch_slots=3, max_seq=64,
+                      policy=BASE)
+    res = beam_decode(eng, prompt, width=3, max_new=5)
+    ref = _ref_beam(model, params, prompt, width=3, max_new=5)
+    assert [t for t, _ in res.beams] == [t for t, _ in ref]
+    np.testing.assert_allclose([s for _, s in res.beams],
+                               [s for _, s in ref], rtol=1e-4, atol=1e-4)
+    assert res.stats["forks"] > 0
+    assert eng.kv.blocks_in_use == 0
+    assert not eng.kv.audit().diagnostics
+
+
+def test_beam_width_one_is_greedy(tiny):
+    model, params = tiny
+    ref, _ = _run(model, params, BASE, prompts=[PROMPTS[0]], max_new=8)
+    eng = ServeEngine(model, params, batch_slots=4, max_seq=64,
+                      policy=BASE)
+    res = beam_decode(eng, list(PROMPTS[0]), width=1, max_new=8)
+    assert res.tokens == ref[0]
+    assert res.stats["forks"] == 0
+    assert eng.kv.blocks_in_use == 0
+
+
+def test_beam_rejects_bad_setups(tiny):
+    model, params = tiny
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=32,
+                      policy=BASE)
+    with pytest.raises(ValueError, match="width"):
+        beam_decode(eng, [1, 2], width=3, max_new=2)
+    dense = ServeEngine(model, params, batch_slots=2, max_seq=32,
+                        policy=ServingPolicy(cache="dense"))
+    with pytest.raises(ValueError, match="paged"):
+        beam_decode(dense, [1, 2], width=2, max_new=2)
+
+
+# -- gating / policy / provenance ---------------------------------------------
+
+
+def test_speculation_gates_off_on_dense_cache(tiny):
+    """Dense caches cannot rewind: speculation silently degrades to
+    plain decode rather than corrupting state."""
+    model, params = tiny
+    pol = ServingPolicy(cache="dense", prefill_chunk=8,
+                        speculative=True)
+    out, eng = _run(model, params, pol)
+    assert not eng.spec_on
+    assert eng.describe()["speculative"]["verify_calls"] == 0
+    ref, _ = _run(model, params, ServingPolicy(cache="dense",
+                                               prefill_chunk=8))
+    assert out == ref
+
+
+def test_speculative_policy_validation_and_describe(tiny):
+    model, params = tiny
+    with pytest.raises(ValueError, match="draft"):
+        SpeculativePolicy(draft="nope")
+    with pytest.raises(ValueError, match="k"):
+        SpeculativePolicy(k=0)
+    assert ServingPolicy(speculative=True).speculative.enabled
+    pol = ServingPolicy(cache="paged",
+                        speculative={"enabled": True, "k": 2})
+    assert pol.describe()["speculative"]["k"] == 2
+    with repro.session(serving=pol):
+        eng = ServeEngine(model, params, batch_slots=1, max_seq=32)
+    assert eng.session.describe()["serving"]["speculative"]["enabled"]
+    assert eng.describe()["speculative"]["enabled"]
+
+
+def test_router_aggregates_speculative_provenance(tiny):
+    """Router.describe() rolls accepted/rejected tokens, rollback frees
+    and forks up across replicas next to placement."""
+    model, params = tiny
+    router = Router([ServeEngine(model, params, batch_slots=2, max_seq=64,
+                                 policy=SPEC) for _ in range(2)])
+    for i, p in enumerate(PROMPTS):
+        router.submit(Request(uid=i, prompt=list(p), max_new_tokens=6))
+    router.run_until_done()
+    agg = router.describe()["speculative"]
+    assert agg["spec_rounds"] > 0
+    assert agg["accepted_tokens"] >= 0 and agg["rejected_tokens"] >= 0
+    per = [e.describe()["speculative"]["rounds"] for e in router.engines]
+    assert agg["spec_rounds"] == sum(per)
