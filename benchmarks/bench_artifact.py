@@ -1,0 +1,48 @@
+"""Shared JSON artifact emission for ``benchmarks/bench_*.py``.
+
+Every benchmark used to hand-roll its own ``json.dumps`` + ``--out``
+handling; :func:`emit` is the single version of that.  On top of the
+benchmark's own payload it embeds
+
+* ``session`` — :meth:`repro.runtime.Session.describe` provenance for
+  the session the benchmark ran under (policies, backend, obs state),
+* ``metrics`` — the session tracer's metrics snapshot (counters /
+  gauges / histogram summaries), when observability is enabled,
+
+so a CI artifact is self-describing: the numbers and the exact
+configuration that produced them travel together.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+
+def emit(bench: str, payload: dict[str, Any], *, out: str | None = None,
+         quick: bool = False, session: Any = None,
+         echo: bool = True) -> dict[str, Any]:
+    """Assemble, print, and optionally write one benchmark artifact.
+
+    ``session`` defaults to the current ambient session; pass the
+    session the benchmark actually ran under when it differs (e.g. the
+    bench opened its own ``repro.session(...)`` block).  Returns the
+    assembled dict (handy for in-process assertions).
+    """
+    import repro
+    from repro import obs
+
+    sess = session if session is not None else repro.current_session()
+    obj: dict[str, Any] = {"bench": bench, "quick": quick, **payload,
+                           "session": sess.describe()}
+    tracer = obs.get_tracer(sess)
+    if tracer is not None:
+        obj["metrics"] = tracer.metrics.snapshot()
+    blob = json.dumps(obj, indent=2, default=str)
+    if echo or not out:
+        print(blob)
+    if out:
+        with open(out, "w") as f:
+            f.write(blob + "\n")
+        print(f"wrote {out}")
+    return obj

@@ -27,13 +27,13 @@ Run:  PYTHONPATH=src python benchmarks/bench_beamsearch.py [--quick]
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import bench_artifact
 import repro
 from repro.configs.base import get_config
 from repro.core import autograd as ag
@@ -188,15 +188,12 @@ def main():
     engine_stats = run_engine_beam(args.quick)
 
     if args.out:
-        payload = {
-            "quick": args.quick,
-            "tape": [{"name": n, "value": v, "derived": d}
-                     for n, v, d in rows],
-            "engine_beam": engine_stats,
-        }
-        with open(args.out, "w") as f:
-            f.write(json.dumps(payload, indent=2, default=str))
-        print(f"wrote {args.out}")
+        bench_artifact.emit(
+            "beamsearch",
+            {"tape": [{"name": n, "value": v, "derived": d}
+                      for n, v, d in rows],
+             "engine_beam": engine_stats},
+            out=args.out, quick=args.quick, echo=False)
 
 
 if __name__ == "__main__":

@@ -28,12 +28,13 @@ compile dominates CI minutes and says nothing about analysis cost);
 from __future__ import annotations
 
 import argparse
-import json
 import statistics
 import time
 
 import jax
 import jax.numpy as jnp
+
+import bench_artifact
 
 
 def bench_jit_adaptation() -> list[tuple[str, float, str]]:
@@ -148,9 +149,9 @@ def main(argv: list[str] | None = None) -> int:
               f"overhead {ana['overhead'][lvl]*100:+.1f}% vs off")
 
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(result, f, indent=2)
-        print(f"wrote {args.out}")
+        result.pop("bench", None)
+        bench_artifact.emit("compile", result, out=args.out,
+                            quick=args.quick, echo=False)
 
     if args.quick:
         # the CI contract: always-on verification is effectively free

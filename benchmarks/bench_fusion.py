@@ -28,12 +28,12 @@ from __future__ import annotations
 
 import argparse
 import functools
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 
+import bench_artifact
 import repro
 from repro.core.tensor import ops
 from repro.runtime import CompilerPolicy
@@ -244,13 +244,9 @@ def main() -> None:
     result = bench(n_ops=n_ops, iters=iters, side=side)
     attn = bench_attention(iters=iters)
     epi = bench_epilogue(iters=iters)
-    payload = {"bench": "fusion", "quick": args.quick, **result,
-               "attention": attn, "epilogue": epi}
-    blob = json.dumps(payload, indent=2, default=str)
-    print(blob)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(blob)
+    bench_artifact.emit("fusion",
+                        {**result, "attention": attn, "epilogue": epi},
+                        out=args.out, quick=args.quick)
     assert result["numerics_exact_vs_eager"], "compiled != eager"
     assert result["compiled_dispatches"] <= 2, \
         "pipeline failed to collapse the chain"

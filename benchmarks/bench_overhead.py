@@ -11,13 +11,15 @@ overhead ≈ 0 (everything jit-compiles to the same XLA program).
 
 from __future__ import annotations
 
-import time
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import bench_artifact
 import repro
+from repro import obs
 from repro.core import autograd as ag
 from repro.core import nn
 from repro.core.autograd import functions as F
@@ -29,11 +31,11 @@ def _bench(fn, *args, iters=ITERS, warmup=5):
     for _ in range(warmup):
         out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    t0 = obs.now()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return time.perf_counter() - t0
+    return obs.now() - t0
 
 
 # -------------------------------------------------------- model definitions
@@ -238,6 +240,125 @@ def _run(key) -> list[tuple[str, float, str]]:
     return rows
 
 
+# ------------------------------------------------------ observability tax
+
+def run_obs_overhead(reps: int = 3) -> dict:
+    """Serving throughput with observability off vs on, same engine code.
+
+    Three engines decode the same workload: ``baseline`` and ``off``
+    are both obs-disabled (the instrumented code path with every hook
+    behind its ``tracer is None`` guard — identical, so their spread is
+    the measurement noise floor), ``on`` records the full trace.  Each
+    engine warms its jit caches untimed, then the reps interleave
+    across engines so drift hits all three equally.  Min-of-reps is the
+    estimator.  Also microbenchmarks the disabled-path guard
+    (``obs.get_tracer()`` with obs off) to show the per-site cost.
+    """
+    from bench_serving import _fresh, drive, make_workload
+    from repro.configs.base import get_config
+    from repro.models import build_model
+    from repro.runtime import ServingPolicy
+    from repro.serving import ServeEngine
+
+    # large enough that a decode step costs ~ms: the contract compares
+    # per-step instrumentation (µs scale) against real model work, not
+    # against an empty loop
+    cfg = get_config("codeqwen1.5-7b", reduced=True, n_layers=4,
+                     d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                     vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = ServingPolicy(cache="paged", block_size=8, prefill_chunk=8)
+    workload = make_workload(6, 16, seed=5)
+    warmup = make_workload(2, 4, seed=6)
+    tokens = None
+
+    def make_engine(obs_on: bool) -> ServeEngine:
+        mode = "on" if obs_on else "off"
+        with repro.session(obs=obs_on, tag=f"bench_overhead:obs-{mode}"):
+            eng = ServeEngine(model, params, batch_slots=2, max_seq=64,
+                              policy=policy)
+        drive(eng, _fresh(warmup))        # jit caches are per-engine:
+        drive(eng, _fresh(workload))      # compile + settle, untimed
+        return eng
+
+    engines = {"baseline": make_engine(False),
+               "off": make_engine(False),
+               "on": make_engine(True)}
+    times: dict[str, list[float]] = {k: [] for k in engines}
+    for _ in range(reps):
+        for name, eng in engines.items():           # interleaved reps
+            done, wall = drive(eng, _fresh(workload))
+            times[name].append(wall)
+            got = {r.uid: list(r.generated) for r in done}
+            assert tokens is None or got == tokens, \
+                f"{name} decoded different tokens"
+            tokens = got
+    best = {k: min(v) for k, v in times.items()}
+
+    n = 100_000
+    with repro.session():
+        t0 = obs.now()
+        for _ in range(n):
+            obs.get_tracer()
+        guard_us = (obs.now() - t0) / n * 1e6
+
+    off_vs_base = best["off"] / best["baseline"]
+    on_vs_off = best["on"] / best["off"]
+    for name in ("baseline", "off", "on"):
+        print(f"obs_serving_{name}_s,{best[name]*1e6:.1f},"
+              f"min of {reps} reps")
+    print(f"obs_disabled_guard_us,{guard_us:.3f},per get_tracer() call")
+    print(f"obs off-vs-baseline {100*(off_vs_base-1):+.1f}% (noise floor), "
+          f"on-vs-off {100*(on_vs_off-1):+.1f}%")
+    return {"reps": reps, "times_s": times, "min_s": best,
+            "disabled_guard_us": round(guard_us, 3),
+            "off_vs_baseline": round(off_vs_base, 4),
+            "on_vs_off": round(on_vs_off, 4)}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: skip the model-family table and assert "
+                    "the observability overhead contract")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="interleaved reps per obs mode")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write a JSON artifact to PATH")
+    args = ap.parse_args(argv)
+
+    result: dict = {}
+    if not args.quick:
+        rows = run()
+        for name, val, derived in rows:
+            print(f"{name},{val*1e6/ITERS:.1f},{derived}")
+        result["families"] = {n: {"seconds": v, "note": d}
+                              for n, v, d in rows}
+
+    ob = run_obs_overhead(reps=args.reps or 5)
+    result["obs_overhead"] = ob
+    bench_artifact.emit("overhead", result, out=args.out, quick=args.quick,
+                        echo=False)
+
+    if args.quick:
+        # the CI contract: instrumentation behind a disabled policy is
+        # noise (off == baseline code-path-for-code-path), and recording
+        # the full trace costs < 5% serving throughput
+        if not (0.95 <= ob["off_vs_baseline"] <= 1.05):
+            print(f"FAIL obs-off run differs from baseline by "
+                  f"{100*(ob['off_vs_baseline']-1):+.1f}% (budget ±5%)")
+            return 1
+        if ob["on_vs_off"] > 1.05:
+            print(f"FAIL obs-on tracing costs "
+                  f"{100*(ob['on_vs_off']-1):+.1f}% serving throughput "
+                  "(budget 5%)")
+            return 1
+        print(f"ok: obs-off indistinguishable from baseline "
+              f"({100*(ob['off_vs_baseline']-1):+.1f}%), obs-on costs "
+              f"{100*(ob['on_vs_off']-1):+.1f}% (budget 5%)")
+    return 0
+
+
 if __name__ == "__main__":
-    for name, val, derived in run():
-        print(f"{name},{val*1e6/ITERS:.1f},{derived}")
+    raise SystemExit(main())

@@ -29,14 +29,15 @@ to start a serving-perf trajectory across PRs.
 from __future__ import annotations
 
 import argparse
-import json
-import time
 
 import jax
 import numpy as np
 
+import bench_artifact
 import repro
+from repro import obs
 from repro.configs.base import get_config
+from repro.core.tensor import ops
 from repro.models import build_model
 from repro.runtime import ServingPolicy
 from repro.serving import FixedProposer, Request, Router, ServeEngine
@@ -90,14 +91,14 @@ def drive(engine: ServeEngine, workload, max_steps: int = 5000):
     """Submit requests at their arrival step; run to completion."""
     pending = list(workload)
     done = []
-    t0 = time.time()
+    t0 = obs.now()
     for step in range(max_steps):
         while pending and pending[0][0] <= step:
             engine.submit(pending.pop(0)[1])
         done.extend(engine.step())
         if not pending and not engine.active and not engine.waiting:
             break
-    wall = time.time() - t0
+    wall = obs.now() - t0
     return done, wall
 
 
@@ -160,7 +161,7 @@ def run_sharing_scenario(name: str, model, params, policy: ServingPolicy, *,
         router = Router(engines)
         pending = list(fresh)
         done = []
-        t0 = time.time()
+        t0 = obs.now()
         for step in range(5000):
             while pending and pending[0][0] <= step:
                 router.submit(pending.pop(0)[1])
@@ -168,7 +169,7 @@ def run_sharing_scenario(name: str, model, params, policy: ServingPolicy, *,
             if not pending and not any(e.active or e.waiting
                                        for e in engines):
                 break
-        wall = time.time() - t0
+        wall = obs.now() - t0
     toks = sum(len(r.generated) for r in done)
     leader_uid = fresh[0][1].uid
     ttft = {r.uid: r.first_token_time - r.submit_time for r in done
@@ -243,6 +244,98 @@ def run_sharing_section(model, params, *, slots: int, max_seq: int,
           "across sharing-off / sharing-on / routed")
     return {"trace": trace, "shared_prompt_tokens": 32,
             "requests": n_req, "results": results}
+
+
+def run_obs_section(model, params, *, slots: int, max_seq: int,
+                    n_req: int, max_new: int, chunk: int,
+                    trace_path: str) -> dict:
+    """Drive one paged scenario with observability on; export the trace.
+
+    The same run exercises all three instrumented layers — the serving
+    engine (request lifecycle spans/instants), the paged KV cache's
+    memory telemetry bridge (``mem.alloc``/``mem.free``,
+    ``kv.grow``), and the graph compiler (a small ``repro.compile``
+    function called twice: trace/pass/lower spans on the miss, a
+    program-cache-hit counter on the replay).  Asserts:
+
+    * the exported JSON passes the Chrome trace-event schema validator
+      (i.e. Perfetto will load it),
+    * span/instant names from all three layers are present, and
+    * TTFT / inter-token percentiles computed from the trace by
+      ``repro.obs.summarize`` match the benchmark's own numbers
+      (``Request`` timestamps) within 1%.
+    """
+    from repro.obs import save_trace, validate_chrome_trace
+    from repro.obs.summarize import summarize
+
+    workload = make_workload(n_req, max_new, seed=3)
+    policy = ServingPolicy(cache="paged", scheduler="fifo", block_size=8,
+                           prefill_chunk=chunk)
+
+    @repro.compile
+    def poly(x, y):
+        return ops.tanh(ops.add(ops.mul(x, y), x))
+
+    with repro.session(obs=True, tag="bench_serving:obs") as sess:
+        a = np.linspace(-1.0, 1.0, 4096, dtype=np.float32)
+        poly(a, a)                       # compiler layer: trace + lower
+        poly(a + 1.0, a - 1.0)           # program-cache hit
+        engine = ServeEngine(model, params, batch_slots=slots,
+                             max_seq=max_seq, policy=policy)
+        done, wall = drive(engine, _fresh(workload))
+        tracer = obs.get_tracer(sess)
+
+    assert tracer is not None, "session(obs=True) produced no tracer"
+    trace = save_trace(tracer, trace_path)
+    errors = validate_chrome_trace(trace)
+    assert not errors, f"exported trace fails schema validation: {errors}"
+
+    span_names = {s.name for s in tracer.spans}
+    inst_names = {i.name for i in tracer.instants}
+    for want in ("serve.step", "serve.decode_step",        # serving
+                 "kv.grow",                                # memory
+                 "compiler.trace", "compiler.lower"):      # compiler
+        assert want in span_names, f"missing span {want!r} in trace"
+    for want in ("request.submit", "request.first_token", "request.done",
+                 "mem.alloc"):
+        assert want in inst_names, f"missing instant {want!r} in trace"
+    hits = tracer.metrics.snapshot()["counters"]
+    assert hits.get("compiler.program_cache_hit", 0) >= 1
+
+    # the trace-side latency summary must agree with the benchmark's own
+    # Request-timestamp numbers within 1%
+    summary = summarize(trace)
+    ttfts = [r.first_token_time - r.submit_time for r in done
+             if r.first_token_time is not None]
+    inter = []
+    for r in done:
+        ts = sorted(r.token_times)
+        inter.extend(b - a for a, b in zip(ts, ts[1:]))
+
+    def check(name, bench_vals, dist):
+        assert dist["count"] == len(bench_vals), \
+            (name, dist["count"], len(bench_vals))
+        for q in (50, 90, 99):
+            want = float(np.percentile(bench_vals, q))
+            got = dist[f"p{q}"]
+            assert abs(got - want) <= 0.01 * abs(want) + 1e-9, \
+                f"{name} p{q}: trace {got} vs bench {want}"
+
+    check("ttft", ttfts, summary["requests"]["ttft_s"])
+    check("inter_token", inter, summary["requests"]["inter_token_s"])
+
+    toks = sum(len(r.generated) for r in done)
+    print(f"[{'obs-on-paged-fifo':>28s}] {toks:4d} tok in {wall:7.2f}s | "
+          f"{len(tracer.spans)} spans + {len(tracer.instants)} instants "
+          f"-> {trace_path} (schema ok, "
+          f"ttft/inter-token match bench within 1%)")
+    return {"requests": len(done), "tokens": toks,
+            "spans": len(tracer.spans), "instants": len(tracer.instants),
+            "dropped_events": tracer.dropped,
+            "trace_path": trace_path,
+            "ttft_s": summary["requests"]["ttft_s"],
+            "inter_token_s": summary["requests"]["inter_token_s"],
+            "metrics": tracer.metrics.snapshot()}
 
 
 def make_spec_workload(n_requests: int, max_new: int, seed: int = 11):
@@ -383,6 +476,9 @@ def main():
     ap.add_argument("--trace", default="poisson",
                     choices=("poisson", "staggered"),
                     help="arrival process for the sharing section")
+    ap.add_argument("--obs-trace", metavar="PATH", default=None,
+                    help="run an observability-on scenario and write a "
+                    "Perfetto-loadable Chrome trace JSON to PATH")
     args = ap.parse_args()
 
     overrides = {}
@@ -447,17 +543,20 @@ def main():
                                    n_req=6 if args.quick else 8,
                                    max_new=48, chunk=chunk)
 
-    payload = {"arch": cfg.name, "quick": args.quick, "slots": args.slots,
+    payload = {"arch": cfg.name, "slots": args.slots,
                "max_seq": args.max_seq, "prefill_chunk": chunk,
                "results": results, "sharing": sharing,
                "speculative": speculative}
-    blob = json.dumps(payload, indent=2, default=str)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(blob)
-        print(f"\nwrote {args.out}")
-    else:
-        print(blob)
+
+    if args.obs_trace:
+        print()
+        payload["observability"] = run_obs_section(
+            model, params, slots=args.slots, max_seq=args.max_seq,
+            n_req=min(n_req, 6), max_new=max_new, chunk=chunk,
+            trace_path=args.obs_trace)
+
+    bench_artifact.emit("serving", payload, out=args.out,
+                        quick=args.quick, echo=not args.out)
 
 
 if __name__ == "__main__":

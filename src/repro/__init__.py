@@ -8,14 +8,16 @@ Top-level API: the unified runtime Session —
 """
 
 from repro.runtime import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
-                           PrecisionPolicy, PrefixPolicy, ServingPolicy,
-                           Session, current_session, default_session, session)
+                           ObservabilityPolicy, PrecisionPolicy, PrefixPolicy,
+                           ServingPolicy, Session, current_session,
+                           default_session, session)
 
 __all__ = [
     "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
     "PrefixPolicy", "CompilerPolicy", "AnalysisPolicy",
+    "ObservabilityPolicy",
     "session", "current_session", "default_session",
-    "compile",
+    "compile", "obs",
 ]
 
 __version__ = "0.3.0"
@@ -28,4 +30,8 @@ def __getattr__(name):
         from repro.compiler import compile as _compile
 
         return _compile
+    if name == "obs":
+        import repro.obs as _obs
+
+        return _obs
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

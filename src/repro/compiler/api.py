@@ -60,21 +60,26 @@ def compile_graph(graph: graph_mod.Graph, policy: CompilerPolicy,
     :class:`~repro.analysis.AnalysisError`; the full report (including
     non-fatal lint) is attached as ``exe.diagnostics``.
     """
-    snapshot = lowering_mod.snapshot_logical(graph)
-    if analysis is not None and analysis.enabled:
-        verify = analysis if analysis.strict else None
-        report = PassManager.from_policy(policy).run(graph, verify=verify)
-    else:
-        report = optimize(graph, policy)
-    plan = lowering_mod.memory_plan(snapshot, graph)
-    exe = lower(graph, policy, report, interpret=interpret, plan=plan)
-    if analysis is not None and analysis.enabled:
-        from repro.analysis.suite import analyze_graph
+    from repro import obs
 
-        diags = analyze_graph(graph, analysis, exe=exe)
-        exe.diagnostics = diags
-        diags.raise_if_errors(analysis.error_threshold)
-    return exe
+    with obs.span("compiler.compile", "compiler", nodes=len(graph.order)):
+        snapshot = lowering_mod.snapshot_logical(graph)
+        if analysis is not None and analysis.enabled:
+            verify = analysis if analysis.strict else None
+            report = PassManager.from_policy(policy).run(graph, verify=verify)
+        else:
+            report = optimize(graph, policy)
+        plan = lowering_mod.memory_plan(snapshot, graph)
+        exe = lower(graph, policy, report, interpret=interpret, plan=plan)
+        if analysis is not None and analysis.enabled:
+            from repro.analysis.suite import analyze_graph
+
+            with obs.span("compiler.analyze", "compiler",
+                          level=analysis.level):
+                diags = analyze_graph(graph, analysis, exe=exe)
+            exe.diagnostics = diags
+            diags.raise_if_errors(analysis.error_threshold)
+        return exe
 
 
 def describe_report(report: list[PassStats], exe: Executable | None = None
@@ -143,10 +148,13 @@ class CompiledFunction:
                policy: CompilerPolicy, analysis: Any = None
                ) -> tuple[Executable, dict[int, int | None], dict[int, Any],
                           Any, bool]:
+        from repro import obs
         from repro.core.tensor.lazy_backend import LazyBackend
 
         lb = LazyBackend()
-        with session(backend=lb, compiler=policy):
+        with obs.span("compiler.trace", "compiler",
+                      fn=self.__name__), \
+                session(backend=lb, compiler=policy):
             leaves = [lb._lift(jnp.asarray(a)) for a in args]
             # leaves minted from here on were created *during* the traced
             # call — if any of them ends up as a graph input, it is an
@@ -178,23 +186,36 @@ class CompiledFunction:
         return exe, arg_pos, captured, treedef, cacheable
 
     def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        from repro import obs
+
+        tracer = obs.get_tracer()
         policy = self._policy()
         key = self._key(args, kwargs)
         entry = self._cache.get(key)
         if entry is None:
+            if tracer is not None:
+                tracer.metrics.counter("compiler.program_cache_miss").add()
             exe, arg_pos, captured, treedef, cacheable = self._trace(
                 args, kwargs, policy, self._analysis())
             if cacheable:
                 self._cache[key] = (exe, arg_pos, captured, treedef)
         else:
             exe, arg_pos, captured, treedef = entry
+            if tracer is not None:
+                tracer.metrics.counter("compiler.program_cache_hit").add()
         self.last_executable = exe
         env: dict[int, Any] = {}
         for cid in exe.inputs:
             pos = arg_pos.get(cid)
             env[cid] = (jnp.asarray(args[pos]) if pos is not None
                         else captured[cid])
-        outs = exe.output_values(exe.run(env))
+        if tracer is None:
+            outs = exe.output_values(exe.run(env))
+        else:
+            with tracer.span("compiler.execute", "compiler",
+                             fn=self.__name__,
+                             dispatches=exe.n_dispatches):
+                outs = exe.output_values(exe.run(env))
         return jax.tree_util.tree_unflatten(treedef, outs)
 
 

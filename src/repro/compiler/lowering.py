@@ -173,6 +173,20 @@ def lower(graph: Graph, policy: Any, report: list[PassStats] | None = None,
     ``plan`` is the ``memory_plan`` over the pre-pass snapshot; when
     absent (direct/testing use) it is derived from the optimized graph.
     """
+    from repro import obs
+
+    with obs.span("compiler.lower", "compiler",
+                  nodes=len(graph.order)) as sp:
+        exe = _lower(graph, policy, report, interpret=interpret, plan=plan)
+        if sp is not None:
+            sp.attrs.update({"dispatches": exe.n_dispatches,
+                             "pallas_kernels": exe.n_kernels})
+        return exe
+
+
+def _lower(graph: Graph, policy: Any, report: list[PassStats] | None = None,
+           interpret: bool | None = None,
+           plan: tuple | None = None) -> Executable:
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     consts = {uid: graph.nodes[uid].value for uid in graph.order

@@ -818,12 +818,21 @@ class PassManager:
         :class:`~repro.analysis.AnalysisError` naming the pass that
         broke the invariant — a miscompile caught at the rewrite that
         introduced it, not at the numerics it corrupts."""
+        from repro import obs
+
+        tracer = obs.get_tracer()
         report: list[PassStats] = []
         for p in self.passes:
             nb, eb = len(graph.order), graph.n_edges()
-            extra = p.run(graph)
-            report.append(PassStats(p.name, nb, len(graph.order),
-                                    eb, graph.n_edges(), extra))
+            with obs.span(f"compiler.pass.{p.name}", "compiler") as sp:
+                extra = p.run(graph)
+                stats = PassStats(p.name, nb, len(graph.order),
+                                  eb, graph.n_edges(), extra)
+                if sp is not None:
+                    sp.attrs.update(stats.describe())
+            report.append(stats)
+            if tracer is not None:
+                tracer.metrics.counter("compiler.pass_runs").add()
             if verify is not None and verify.enabled:
                 from repro.analysis.shapes import check_graph
 

@@ -5,6 +5,14 @@ individual tensor operations to specific allocations".  Here, the lazy
 tensor backend (and the tape autograd, if asked) emit events tagged with
 the producing op; traces are serializable and replayable against any
 :class:`MemoryManagerAdapter` policy for fragmentation studies.
+
+Events carry a monotonic timestamp (``repro.obs.now``; ``ts=0.0`` in
+traces written before timestamps existed — ``load``/``replay`` accept
+both).  When the ambient session has observability enabled
+(``repro.session(obs=True)``), every alloc/free is additionally mirrored
+into that tracer as a ``mem.alloc`` / ``mem.free`` instant — the bridge
+that puts memory events on the same timeline as compiler and serving
+spans, whether or not an :class:`AllocTrace` recording is active.
 """
 
 from __future__ import annotations
@@ -20,6 +28,7 @@ class TraceEvent:
     uid: int           # logical buffer id
     nbytes: int = 0
     tag: str = ""      # producing tensor op
+    ts: float = 0.0    # monotonic seconds (repro.obs.now); 0.0 = untimed
 
 
 @dataclass
@@ -38,6 +47,8 @@ class AllocTrace:
 
     @classmethod
     def load(cls, path: str) -> "AllocTrace":
+        # TraceEvent defaults keep this byte-compatible with traces
+        # written before the ts field existed.
         with open(path) as f:
             return cls([TraceEvent(**e) for e in json.load(f)])
 
@@ -62,6 +73,19 @@ class _State(threading.local):
 _STATE = _State()
 
 
+def _obs_tracer():
+    """The ambient session's tracer, or None — kept out of the common
+    case with a cheap policy check before any obs import."""
+    try:
+        from repro.runtime import current_session
+    except ImportError:  # pragma: no cover - partial-init edge
+        return None
+    policy = getattr(current_session(), "obs", None)
+    if policy is None or not getattr(policy, "enabled", False):
+        return None
+    return policy.tracer()
+
+
 def start_recording() -> AllocTrace:
     _STATE.trace = AllocTrace()
     _STATE.live = {}
@@ -75,11 +99,28 @@ def stop_recording() -> AllocTrace | None:
 
 
 def record_alloc(uid: int, nbytes: int, tag: str = "") -> None:
+    tracer = _obs_tracer()
+    if _STATE.trace is None and tracer is None:
+        return
+    from repro.obs.clock import now
+    ts = now()
     if _STATE.trace is not None:
-        _STATE.trace.append(TraceEvent("alloc", uid, nbytes, tag))
+        _STATE.trace.append(TraceEvent("alloc", uid, nbytes, tag, ts))
         _STATE.live[uid] = nbytes
+    if tracer is not None:
+        tracer.instant("mem.alloc", "memory", ts=ts,
+                       uid=uid, nbytes=nbytes, tag=tag)
 
 
 def record_free(uid: int) -> None:
+    tracer = _obs_tracer()
+    if _STATE.trace is None and tracer is None:
+        return
+    from repro.obs.clock import now
+    ts = now()
+    nbytes = 0
     if _STATE.trace is not None and uid in _STATE.live:
-        _STATE.trace.append(TraceEvent("free", uid, _STATE.live.pop(uid)))
+        nbytes = _STATE.live.pop(uid)
+        _STATE.trace.append(TraceEvent("free", uid, nbytes, ts=ts))
+    if tracer is not None:
+        tracer.instant("mem.free", "memory", ts=ts, uid=uid, nbytes=nbytes)

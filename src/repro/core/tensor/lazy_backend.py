@@ -30,6 +30,7 @@ study in ``benchmarks/bench_fragmentation.py``.
 from __future__ import annotations
 
 import itertools
+from contextlib import nullcontext as _nullcontext
 from typing import Any, Callable, Sequence
 
 import jax
@@ -175,6 +176,7 @@ class LazyBackend(TensorBackend):
         return [r.value for r in roots]
 
     def _materialize(self, roots: list[LazyTensor]) -> None:
+        from repro import obs
         from repro.compiler import api as _api
         from repro.compiler import graph as _graph
         from repro.runtime import current_session
@@ -184,34 +186,50 @@ class LazyBackend(TensorBackend):
         sess = current_session()
         policy = sess.compiler
         analysis = sess.analysis
-        graph, sources = _graph.trace(roots)
-        self.ops_fused += sum(1 for uid in graph.order
-                              if graph.nodes[uid].op in _ELEMENTWISE)
+        tracer = obs.get_tracer(sess)
+        cm = (tracer.span("compiler.materialize", "compiler",
+                          roots=len(roots))
+              if tracer is not None else _nullcontext())
+        with cm:
+            graph, sources = _graph.trace(roots)
+            self.ops_fused += sum(1 for uid in graph.order
+                                  if graph.nodes[uid].op in _ELEMENTWISE)
 
-        exe = None
-        key = None
-        if policy.cache_programs:
-            sig = graph.signature()
-            if sig is not None:
-                # analysis level is part of the key: a program cached
-                # with checks off must not satisfy a strict session
-                key = (sig, policy, analysis)
-                exe = self._programs.get(key)
-        if exe is not None:
-            self.program_cache_hits += 1
-        else:
-            exe = _api.compile_graph(graph, policy, analysis=analysis)
-            self.kernels_generated += exe.n_kernels
-            if key is not None:
-                if len(self._programs) >= 256:     # bounded, FIFO eviction
-                    self._programs.pop(next(iter(self._programs)))
-                self._programs[key] = exe
-        self.last_compile_report = _api.describe_report(exe.report, exe)
-        self.last_compile_policy = policy
-        self.last_analysis = exe.diagnostics
+            exe = None
+            key = None
+            if policy.cache_programs:
+                sig = graph.signature()
+                if sig is not None:
+                    # analysis level is part of the key: a program cached
+                    # with checks off must not satisfy a strict session
+                    key = (sig, policy, analysis)
+                    exe = self._programs.get(key)
+            if exe is not None:
+                self.program_cache_hits += 1
+                if tracer is not None:
+                    tracer.metrics.counter(
+                        "compiler.program_cache_hit").add()
+            else:
+                if tracer is not None:
+                    tracer.metrics.counter(
+                        "compiler.program_cache_miss").add()
+                exe = _api.compile_graph(graph, policy, analysis=analysis)
+                self.kernels_generated += exe.n_kernels
+                if key is not None:
+                    if len(self._programs) >= 256:  # bounded, FIFO eviction
+                        self._programs.pop(next(iter(self._programs)))
+                    self._programs[key] = exe
+            self.last_compile_report = _api.describe_report(exe.report, exe)
+            self.last_compile_policy = policy
+            self.last_analysis = exe.diagnostics
 
-        env = {cid: sources[cid].value for cid in exe.inputs}
-        env = exe.run(env)
+            env = {cid: sources[cid].value for cid in exe.inputs}
+            if tracer is None:
+                env = exe.run(env)
+            else:
+                with tracer.span("compiler.execute", "compiler",
+                                 dispatches=exe.n_dispatches):
+                    env = exe.run(env)
 
         # allocation telemetry over surviving logical nodes; uids are the
         # LazyTensor uids so events stay unique across materializations

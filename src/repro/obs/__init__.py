@@ -1,0 +1,81 @@
+"""``repro.obs`` — unified tracing + metrics across compiler, serving, memory.
+
+One event model for the whole stack: monotonic-clock :class:`Span` trees,
+instant events, and a :class:`MetricsRegistry` of counters / gauges /
+histograms, recorded into a session-scoped :class:`Tracer` and exported
+as Chrome-trace-event JSON loadable in Perfetto / ``chrome://tracing``.
+
+Gating: observability is **off by default**.  Enable per session::
+
+    with repro.session(obs=True):          # or obs={"max_events": 50_000}
+        ...
+
+Instrumentation sites call :func:`get_tracer`, which returns ``None``
+unless the ambient session's :class:`ObservabilityPolicy` is enabled —
+the off path is a single attribute check.  Sessions derived from an
+enabled one (nested ``repro.session(...)``) share the same tracer, so
+compiler, serving, and memory events land in one stream.
+
+Summarize a trace offline::
+
+    python -m repro.obs summarize trace.json
+"""
+
+from __future__ import annotations
+
+from contextlib import AbstractContextManager, nullcontext
+from typing import Any
+
+from repro.obs.clock import now
+from repro.obs.export import save_trace, to_chrome_trace, validate_chrome_trace
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import Instant, Sample, Span, Tracer
+
+__all__ = [
+    "now",
+    "get_tracer",
+    "span",
+    "instant",
+    "Span",
+    "Instant",
+    "Sample",
+    "Tracer",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "to_chrome_trace",
+    "save_trace",
+    "validate_chrome_trace",
+]
+
+
+def get_tracer(sess: Any | None = None) -> Tracer | None:
+    """The tracer of ``sess`` (default: the ambient session), or ``None``
+    when its observability policy is disabled or absent."""
+    if sess is None:
+        from repro.runtime import current_session
+        sess = current_session()
+    policy = getattr(sess, "obs", None)
+    if policy is None:
+        return None
+    tracer = policy.tracer()
+    return tracer if isinstance(tracer, Tracer) else None
+
+
+def span(name: str, cat: str = "",
+         **attrs: Any) -> AbstractContextManager[Span | None]:
+    """Context manager recording a span on the ambient session's tracer;
+    a no-op (yielding ``None``) when observability is off."""
+    tracer = get_tracer()
+    if tracer is None:
+        return nullcontext(None)
+    return tracer.span(name, cat, **attrs)
+
+
+def instant(name: str, cat: str = "", ts: float | None = None,
+            **attrs: Any) -> None:
+    """Record an instant event on the ambient session's tracer, if any."""
+    tracer = get_tracer()
+    if tracer is not None:
+        tracer.instant(name, cat, ts=ts, **attrs)

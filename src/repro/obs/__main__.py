@@ -1,0 +1,51 @@
+"""CLI: ``python -m repro.obs summarize trace.json [--json] [--top N]``.
+
+Also: ``python -m repro.obs validate trace.json`` checks a trace against
+the Chrome trace-event schema and exits non-zero on problems.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.export import validate_chrome_trace
+from repro.obs.summarize import load_trace, render, summarize
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # Bare `python -m repro.obs trace.json` means summarize.
+    if argv and argv[0] not in ("summarize", "validate", "-h", "--help"):
+        argv.insert(0, "summarize")
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sp = sub.add_parser("summarize", help="report on an exported trace")
+    sp.add_argument("trace", help="path to a Chrome-trace JSON")
+    sp.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of text")
+    sp.add_argument("--top", type=int, default=10,
+                    help="rows in the self-time table")
+    vp = sub.add_parser("validate", help="schema-check an exported trace")
+    vp.add_argument("trace", help="path to a Chrome-trace JSON")
+    args = ap.parse_args(argv)
+
+    trace = load_trace(args.trace)
+    if args.cmd == "validate":
+        errs = validate_chrome_trace(trace)
+        for e in errs:
+            print(e, file=sys.stderr)
+        print(f"{args.trace}: "
+              + ("OK" if not errs else f"{len(errs)} problem(s)"))
+        return 1 if errs else 0
+    summary = summarize(trace)
+    if args.json:
+        print(json.dumps(summary, indent=2, default=str))
+    else:
+        print(render(summary, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,19 @@
+"""Monotonic clock for every latency measurement in the repo.
+
+Wall-clock (``time.time``) is subject to NTP slew and manual adjustment,
+which skews TTFT / inter-token latency measurements taken across a step
+boundary.  All tracing and serving latency code uses :func:`now` instead,
+which reads the process-wide monotonic performance counter.  Values are
+only meaningful as *differences* within one process.
+"""
+
+from __future__ import annotations
+
+import time
+
+__all__ = ["now"]
+
+
+def now() -> float:
+    """Seconds on the process-wide monotonic clock (``perf_counter``)."""
+    return time.perf_counter()

@@ -1,0 +1,145 @@
+"""Chrome-trace-event JSON export and schema validation.
+
+The exported object follows the Trace Event Format (the "JSON Array
+Format" wrapped in an object container), which both ``chrome://tracing``
+and Perfetto load directly:
+
+* spans      -> ``"ph": "X"`` complete events with ``ts``/``dur`` in µs
+* instants   -> ``"ph": "i"`` with thread scope (``"s": "t"``)
+* samples    -> ``"ph": "C"`` counter tracks
+* metadata   -> ``"ph": "M"`` process/thread names
+
+Extra top-level keys (``metrics``, ``metadata``) are permitted by the
+format and carry the metrics snapshot alongside the events.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+from repro.obs.trace import Tracer
+
+__all__ = ["to_chrome_trace", "save_trace", "validate_chrome_trace"]
+
+_PHASES = {"X", "B", "E", "i", "I", "C", "M", "b", "e", "n", "s", "t", "f"}
+_INSTANT_SCOPES = {"g", "p", "t"}
+
+
+def _us(tracer: Tracer, t: float) -> float:
+    # Round to ns so artifacts are compact and diff-stable.
+    return round((t - tracer.epoch) * 1e6, 3)
+
+
+def to_chrome_trace(tracer: Tracer) -> dict[str, Any]:
+    """Render a tracer's events as a Perfetto-loadable trace object."""
+    pid = os.getpid()
+    events: list[dict[str, Any]] = [{
+        "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+        "args": {"name": "repro"},
+    }]
+    with tracer._lock:
+        spans = list(tracer.spans)
+        instants = list(tracer.instants)
+        samples = list(tracer.samples)
+        thread_names = dict(tracer.thread_names)
+        dropped = tracer.dropped
+    for tid, tname in sorted(thread_names.items()):
+        events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                       "tid": tid, "args": {"name": tname}})
+    for sp in sorted(spans, key=lambda s: s.start):
+        args: dict[str, Any] = dict(sp.attrs)
+        args["span_id"] = sp.sid
+        if sp.parent is not None:
+            args["parent_id"] = sp.parent
+        events.append({
+            "ph": "X", "name": sp.name, "cat": sp.cat or "default",
+            "ts": _us(tracer, sp.start),
+            "dur": max(round(sp.duration * 1e6, 3), 0.0),
+            "pid": pid, "tid": sp.tid, "args": args,
+        })
+    for ev in sorted(instants, key=lambda e: e.ts):
+        events.append({
+            "ph": "i", "s": "t", "name": ev.name,
+            "cat": ev.cat or "default", "ts": _us(tracer, ev.ts),
+            "pid": pid, "tid": ev.tid, "args": dict(ev.attrs),
+        })
+    for sm in sorted(samples, key=lambda s: s.ts):
+        events.append({
+            "ph": "C", "name": sm.name, "ts": _us(tracer, sm.ts),
+            "pid": pid, "tid": 0, "args": {"value": sm.value},
+        })
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "metadata": {
+            "tool": "repro.obs",
+            "clock": "perf_counter",
+            "epoch_s": tracer.epoch,
+            "dropped_events": dropped,
+        },
+        "metrics": tracer.metrics.snapshot(),
+    }
+
+
+def save_trace(tracer: Tracer, path: str) -> dict[str, Any]:
+    """Export and write a trace JSON; returns the exported object."""
+    obj = to_chrome_trace(tracer)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    return obj
+
+
+def validate_chrome_trace(obj: Any) -> list[str]:
+    """Check an object against the Chrome trace-event schema.
+
+    Returns a list of human-readable problems (empty == valid).  Covers
+    the subset of the format Perfetto's JSON importer requires: the
+    ``traceEvents`` container, per-event phase/name/ts/pid/tid typing,
+    ``dur`` on complete events, scopes on instants, numeric counter
+    args, and end-to-end JSON serializability.
+    """
+    errs: list[str] = []
+    if not isinstance(obj, dict):
+        return ["top-level value is not an object"]
+    events = obj.get("traceEvents")
+    if not isinstance(events, list):
+        return ["missing or non-array 'traceEvents'"]
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if not isinstance(ph, str) or ph not in _PHASES:
+            errs.append(f"{where}: bad phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errs.append(f"{where}: missing string 'name'")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                errs.append(f"{where}: missing integer {key!r}")
+        if ph != "M":
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                errs.append(f"{where}: bad 'ts' {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"{where}: complete event with bad 'dur'")
+        if ph in ("i", "I"):
+            if ev.get("s", "t") not in _INSTANT_SCOPES:
+                errs.append(f"{where}: bad instant scope {ev.get('s')!r}")
+        if ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) for v in args.values()):
+                errs.append(f"{where}: counter event needs numeric args")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            errs.append(f"{where}: 'args' is not an object")
+    try:
+        json.dumps(obj)
+    except (TypeError, ValueError) as e:
+        errs.append(f"not JSON-serializable: {e}")
+    return errs

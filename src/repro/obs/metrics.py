@@ -1,0 +1,173 @@
+"""Counters, gauges, and histograms for the observability layer.
+
+A :class:`MetricsRegistry` hangs off a :class:`~repro.obs.trace.Tracer`
+(one per enabled :class:`~repro.runtime.policies.ObservabilityPolicy`),
+so metrics share the trace's lifetime and land in the same exported
+artifact.  All instruments are thread-safe behind one registry lock;
+gauge updates additionally emit a counter-track sample into the trace so
+Perfetto renders them over time.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import TYPE_CHECKING, Any
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.obs.trace import Tracer
+
+# ``threading.RLock`` is a factory function, not a class, so it cannot
+# appear in annotations; instruments only enter the lock as a context
+# manager anyway.
+_RLock = Any
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
+
+# Raw histogram samples kept for exact percentiles; beyond this the
+# histogram still tracks count/total/min/max but drops raw values.
+_HIST_MAX_SAMPLES = 65_536
+
+
+class Counter:
+    """Monotonically increasing count."""
+
+    def __init__(self, name: str, lock: _RLock) -> None:
+        self.name = name
+        self.value = 0.0
+        self._lock = lock
+
+    def add(self, n: float = 1.0) -> None:
+        with self._lock:
+            self.value += n
+
+
+class Gauge:
+    """Last-write-wins value; each ``set`` also samples a counter track."""
+
+    def __init__(self, name: str, lock: _RLock,
+                 tracer: "Tracer | None") -> None:
+        self.name = name
+        self.value = 0.0
+        self._lock = lock
+        self._tracer = tracer
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self.value = float(value)
+        if self._tracer is not None:
+            self._tracer.sample(self.name, float(value))
+
+
+class Histogram:
+    """Distribution of observed values with exact percentiles.
+
+    Raw samples are bounded (``dropped_samples`` counts the overflow);
+    count/total/min/max stay exact regardless.
+    """
+
+    def __init__(self, name: str, lock: _RLock) -> None:
+        self.name = name
+        self.count = 0
+        self.total = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+        self.values: list[float] = []
+        self.dropped_samples = 0
+        self._lock = lock
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        with self._lock:
+            self.count += 1
+            self.total += v
+            self.vmin = min(self.vmin, v)
+            self.vmax = max(self.vmax, v)
+            if len(self.values) < _HIST_MAX_SAMPLES:
+                self.values.append(v)
+            else:
+                self.dropped_samples += 1
+
+    def percentile(self, q: float) -> float | None:
+        """Linearly-interpolated percentile (numpy's default method)."""
+        with self._lock:
+            vals = sorted(self.values)
+        return percentile(vals, q)
+
+    def summary(self) -> dict[str, Any]:
+        with self._lock:
+            vals = sorted(self.values)
+            count, total = self.count, self.total
+            vmin, vmax = self.vmin, self.vmax
+        out: dict[str, Any] = {
+            "count": count,
+            "total": total,
+            "mean": (total / count) if count else None,
+            "min": vmin if count else None,
+            "max": vmax if count else None,
+        }
+        for q in (50.0, 90.0, 99.0):
+            out[f"p{int(q)}"] = percentile(vals, q)
+        return out
+
+
+def percentile(sorted_vals: list[float], q: float) -> float | None:
+    """Linear-interpolation percentile over pre-sorted values.
+
+    Matches ``numpy.percentile``'s default method so benchmark-side
+    numbers (numpy) and trace-side numbers (this helper) agree exactly.
+    """
+    n = len(sorted_vals)
+    if n == 0:
+        return None
+    if n == 1:
+        return sorted_vals[0]
+    rank = (q / 100.0) * (n - 1)
+    lo = int(rank)
+    hi = min(lo + 1, n - 1)
+    frac = rank - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named instruments (thread-safe)."""
+
+    def __init__(self, tracer: "Tracer | None" = None) -> None:
+        self._tracer = tracer
+        self._lock = threading.RLock()
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter(name, self._lock)
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(name, self._lock, self._tracer)
+            return g
+
+    def histogram(self, name: str) -> Histogram:
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = self._histograms[name] = Histogram(name, self._lock)
+            return h
+
+    def snapshot(self) -> dict[str, Any]:
+        """JSON-serializable point-in-time view of every instrument."""
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            histograms = dict(self._histograms)
+        return {
+            "counters": {n: c.value for n, c in sorted(counters.items())},
+            "gauges": {n: g.value for n, g in sorted(gauges.items())},
+            "histograms": {n: h.summary()
+                           for n, h in sorted(histograms.items())},
+        }

@@ -1,0 +1,186 @@
+"""Offline analysis of an exported trace.
+
+Given a Chrome-trace JSON produced by :mod:`repro.obs.export`, compute:
+
+* a span tree aggregated by call path (count / total / self time);
+* top spans by *self* time (duration minus direct children — the
+  "kernels" view: where time is actually spent, not just contained);
+* per-request serving latency: TTFT (``request.submit`` ->
+  ``request.first_token``) and inter-token gaps (consecutive
+  ``request.token`` events per uid), with mean / p50 / p90 / p99.
+
+Percentiles use the same linear-interpolation method as numpy so trace
+summaries agree with benchmark-side math to float precision.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from repro.obs.metrics import percentile
+
+__all__ = ["load_trace", "summarize", "render"]
+
+
+def load_trace(path: str) -> dict[str, Any]:
+    with open(path) as f:
+        obj = json.load(f)
+    if not isinstance(obj, dict):
+        raise ValueError(f"{path}: trace top level is not an object")
+    return obj
+
+
+def _dist(values: list[float]) -> dict[str, Any]:
+    vals = sorted(values)
+    return {
+        "count": len(vals),
+        "mean": (sum(vals) / len(vals)) if vals else None,
+        "p50": percentile(vals, 50.0),
+        "p90": percentile(vals, 90.0),
+        "p99": percentile(vals, 99.0),
+        "min": vals[0] if vals else None,
+        "max": vals[-1] if vals else None,
+    }
+
+
+def summarize(trace: dict[str, Any]) -> dict[str, Any]:
+    """Aggregate a loaded trace object into a JSON-friendly summary."""
+    events = trace.get("traceEvents", [])
+    spans = [e for e in events if isinstance(e, dict) and e.get("ph") == "X"]
+    instants = [e for e in events
+                if isinstance(e, dict) and e.get("ph") in ("i", "I")]
+
+    # Self time: duration minus the sum of direct children's durations.
+    child_dur: dict[int, float] = {}
+    for ev in spans:
+        args = ev.get("args") or {}
+        parent = args.get("parent_id")
+        if isinstance(parent, int):
+            child_dur[parent] = child_dur.get(parent, 0.0) \
+                + float(ev.get("dur", 0.0))
+
+    by_name: dict[str, dict[str, Any]] = {}
+    by_path: dict[tuple[str, ...], dict[str, Any]] = {}
+    names: dict[int, str] = {}
+    parents: dict[int, int | None] = {}
+    for ev in spans:
+        args = ev.get("args") or {}
+        sid = args.get("span_id")
+        if isinstance(sid, int):
+            names[sid] = str(ev.get("name"))
+            par = args.get("parent_id")
+            parents[sid] = par if isinstance(par, int) else None
+    for ev in spans:
+        args = ev.get("args") or {}
+        sid = args.get("span_id")
+        dur = float(ev.get("dur", 0.0))
+        self_dur = max(dur - child_dur.get(sid, 0.0), 0.0) \
+            if isinstance(sid, int) else dur
+        name = str(ev.get("name"))
+        agg = by_name.setdefault(name, {
+            "name": name, "cat": ev.get("cat", ""),
+            "count": 0, "total_us": 0.0, "self_us": 0.0})
+        agg["count"] += 1
+        agg["total_us"] += dur
+        agg["self_us"] += self_dur
+        # Path = chain of ancestor names, for the rendered span tree.
+        path: list[str] = [name]
+        cur = parents.get(sid) if isinstance(sid, int) else None
+        hops = 0
+        while isinstance(cur, int) and hops < 64:
+            path.append(names.get(cur, "?"))
+            cur = parents.get(cur)
+            hops += 1
+        key = tuple(reversed(path))
+        pagg = by_path.setdefault(key, {"count": 0, "total_us": 0.0})
+        pagg["count"] += 1
+        pagg["total_us"] += dur
+
+    # Request lifecycle latency from serving instants.
+    submits: dict[Any, float] = {}
+    firsts: dict[Any, float] = {}
+    tokens: dict[Any, list[float]] = {}
+    dones: dict[Any, float] = {}
+    for ev in instants:
+        name = ev.get("name")
+        uid = (ev.get("args") or {}).get("uid")
+        ts = float(ev.get("ts", 0.0))
+        if name == "request.submit":
+            submits[uid] = ts
+        elif name == "request.first_token":
+            firsts[uid] = ts
+        elif name == "request.token":
+            tokens.setdefault(uid, []).append(ts)
+        elif name == "request.done":
+            dones[uid] = ts
+    ttft_s = [(firsts[u] - submits[u]) / 1e6
+              for u in firsts if u in submits]
+    inter_s: list[float] = []
+    for ts_list in tokens.values():
+        ts_list.sort()
+        inter_s.extend((b - a) / 1e6 for a, b in zip(ts_list, ts_list[1:]))
+
+    top = sorted(by_name.values(), key=lambda a: -float(a["self_us"]))
+    tree = [{"path": list(k), "count": v["count"],
+             "total_us": round(float(v["total_us"]), 3)}
+            for k, v in sorted(by_path.items())]
+    meta = trace.get("metadata")
+    return {
+        "spans": {"total": len(spans), "by_name": top},
+        "tree": tree,
+        "requests": {
+            "submitted": len(submits),
+            "completed": len(dones),
+            "ttft_s": _dist(ttft_s),
+            "inter_token_s": _dist(inter_s),
+        },
+        "instants": len(instants),
+        "metrics": trace.get("metrics"),
+        "dropped_events": (meta or {}).get("dropped_events", 0)
+        if isinstance(meta, dict) else 0,
+    }
+
+
+def _fmt_dist(d: dict[str, Any]) -> str:
+    def ms(v: Any) -> str:
+        return f"{v * 1e3:.3f}ms" if isinstance(v, (int, float)) else "-"
+    return (f"n={d['count']} mean={ms(d['mean'])} p50={ms(d['p50'])} "
+            f"p90={ms(d['p90'])} p99={ms(d['p99'])} max={ms(d['max'])}")
+
+
+def render(summary: dict[str, Any], top: int = 10) -> str:
+    """Human-readable report for the ``python -m repro.obs`` CLI."""
+    lines: list[str] = []
+    spans = summary["spans"]
+    lines.append(f"spans: {spans['total']}  "
+                 f"instants: {summary['instants']}  "
+                 f"dropped: {summary['dropped_events']}")
+    lines.append("")
+    lines.append("span tree (count, total):")
+    for node in summary["tree"]:
+        path = node["path"]
+        indent = "  " * (len(path) - 1)
+        lines.append(f"  {indent}{path[-1]}  x{node['count']}  "
+                     f"{node['total_us'] / 1e3:.3f}ms")
+    lines.append("")
+    lines.append(f"top {top} spans by self time:")
+    for agg in spans["by_name"][:top]:
+        lines.append(f"  {agg['name']:<40} x{agg['count']:<6} "
+                     f"self {agg['self_us'] / 1e3:>10.3f}ms  "
+                     f"total {agg['total_us'] / 1e3:>10.3f}ms")
+    req = summary["requests"]
+    lines.append("")
+    lines.append(f"requests: {req['submitted']} submitted, "
+                 f"{req['completed']} completed")
+    lines.append(f"  ttft:        {_fmt_dist(req['ttft_s'])}")
+    lines.append(f"  inter-token: {_fmt_dist(req['inter_token_s'])}")
+    metrics = summary.get("metrics")
+    if isinstance(metrics, dict):
+        counters = metrics.get("counters") or {}
+        if counters:
+            lines.append("")
+            lines.append("counters:")
+            for name, val in counters.items():
+                lines.append(f"  {name:<44} {val:g}")
+    return "\n".join(lines)

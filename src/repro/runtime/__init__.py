@@ -12,8 +12,8 @@ kernel overrides, precision policy, and memory manager.
 """
 
 from .policies import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
-                       PrecisionPolicy, PrefixPolicy, ServingPolicy,
-                       SpeculativePolicy, resolve_dtype)
+                       ObservabilityPolicy, PrecisionPolicy, PrefixPolicy,
+                       ServingPolicy, SpeculativePolicy, resolve_dtype)
 from .session import Session
 from .stack import (current_session, default_session, mutate_current,
                     pop_session, push_session, session)
@@ -21,7 +21,8 @@ from .stack import (current_session, default_session, mutate_current,
 __all__ = [
     "Session", "KernelOverrides", "PrecisionPolicy", "ServingPolicy",
     "PrefixPolicy", "SpeculativePolicy",
-    "CompilerPolicy", "AnalysisPolicy", "resolve_dtype",
+    "CompilerPolicy", "AnalysisPolicy", "ObservabilityPolicy",
+    "resolve_dtype",
     "session", "current_session", "default_session",
     "push_session", "pop_session", "mutate_current",
 ]

@@ -377,6 +377,59 @@ class AnalysisPolicy:
                 "audit_serving": self.audit_serving}
 
 
+@dataclass(frozen=True)
+class ObservabilityPolicy:
+    """Session-scoped tracing + metrics gate (see :mod:`repro.obs`).
+
+    Off by default: with ``enabled=False`` every instrumentation site in
+    the compiler, serving engine, and memory telemetry reduces to one
+    attribute check returning ``None`` — near-zero cost.  Enable with
+    ``repro.session(obs=True)`` (or ``obs={"max_events": ...}``).
+
+    enabled:
+        record spans / instants / metrics into this policy's
+        :class:`~repro.obs.trace.Tracer`.
+    max_events:
+        retention bound across spans + instants + counter samples;
+        beyond it events are dropped and counted (``dropped`` in the
+        export metadata), keeping obs-on memory cost bounded.
+
+    The tracer is created lazily and memoized **on the policy instance**:
+    sessions derived via :meth:`Session.replace` keep the same policy
+    object and therefore record into the same stream — that is how
+    compiler, serving, and memory events from nested scopes land in one
+    trace.  ``replace()`` returns a fresh policy and hence a fresh
+    tracer.
+    """
+
+    enabled: bool = False
+    max_events: int = 200_000
+
+    def tracer(self) -> Any:
+        """The policy's lazily-created ``repro.obs.Tracer`` (one per
+        policy instance), or ``None`` when disabled."""
+        if not self.enabled:
+            return None
+        inst = self.__dict__.get("_tracer")
+        if inst is None:
+            from repro.obs.trace import Tracer
+
+            inst = Tracer(max_events=self.max_events)
+            object.__setattr__(self, "_tracer", inst)
+        return inst
+
+    def replace(self, **kw) -> "ObservabilityPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> dict:
+        out: dict[str, Any] = {"enabled": self.enabled,
+                               "max_events": self.max_events}
+        inst = self.__dict__.get("_tracer")
+        if inst is not None:
+            out["recorded"] = inst.describe()
+        return out
+
+
 _DTYPE_ALIASES = {
     "f32": "float32", "fp32": "float32", "float32": "float32",
     "f16": "float16", "fp16": "float16", "float16": "float16",

@@ -18,7 +18,7 @@ from dataclasses import dataclass, field
 from typing import Any
 
 from .policies import (AnalysisPolicy, CompilerPolicy, KernelOverrides,
-                       PrecisionPolicy, ServingPolicy)
+                       ObservabilityPolicy, PrecisionPolicy, ServingPolicy)
 
 # Default mesh-axis candidates for the activation batch dimension; matches
 # the historical sharding/context.py default.
@@ -61,17 +61,26 @@ class Session:
     serving: ServingPolicy = field(default_factory=ServingPolicy)
     compiler: CompilerPolicy = field(default_factory=CompilerPolicy)
     analysis: AnalysisPolicy = field(default_factory=AnalysisPolicy)
+    obs: ObservabilityPolicy = field(default_factory=ObservabilityPolicy)
     memory: Any = None
     tag: str = ""
 
     def __post_init__(self):
         if self.batch_axes is not None:
             object.__setattr__(self, "batch_axes", tuple(self.batch_axes))
+        if isinstance(self.obs, bool):
+            object.__setattr__(self, "obs",
+                               ObservabilityPolicy(enabled=self.obs))
+        elif isinstance(self.obs, dict):
+            # a dict of knobs opts in unless it says otherwise:
+            # session(obs={"max_events": N}) reads as "obs on, bounded"
+            object.__setattr__(self, "obs", {"enabled": True, **self.obs})
         for name, cls in (("kernels", KernelOverrides),
                           ("precision", PrecisionPolicy),
                           ("serving", ServingPolicy),
                           ("compiler", CompilerPolicy),
-                          ("analysis", AnalysisPolicy)):
+                          ("analysis", AnalysisPolicy),
+                          ("obs", ObservabilityPolicy)):
             val = getattr(self, name)
             if isinstance(val, dict):
                 object.__setattr__(self, name, cls(**val))
@@ -80,8 +89,12 @@ class Session:
     def replace(self, **overrides) -> "Session":
         """A derived session; nested fields accept dicts of overrides:
         ``s.replace(kernels={"matmul": fn})`` keeps the other kernels."""
+        if isinstance(overrides.get("obs"), bool):
+            overrides["obs"] = ObservabilityPolicy(enabled=overrides["obs"])
+        elif isinstance(overrides.get("obs"), dict):
+            overrides["obs"] = {"enabled": True, **overrides["obs"]}
         for name in ("kernels", "precision", "serving", "compiler",
-                     "analysis"):
+                     "analysis", "obs"):
             val = overrides.get(name)
             if isinstance(val, dict):
                 overrides[name] = getattr(self, name).replace(**val)
@@ -150,6 +163,7 @@ class Session:
             "serving": self.serving.describe(),
             "compiler": compiler,
             "analysis": self.analysis.describe(),
+            "obs": self.obs.describe(),
             "memory": memory,
             "tag": self.tag,
         }

@@ -21,6 +21,8 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 @dataclass
 class BeamResult:
@@ -85,17 +87,18 @@ def beam_decode(engine, prompt: list[int], *, width: int, max_new: int,
         # COW barrier: every live slot is about to write its next token
         # at slot_pos; forked blocks with other sharers get private
         # copies first
-        for slot in sorted(live):
-            p = int(engine.slot_pos[slot])
-            kv.begin_write(slot, p, p)
-            kv.ensure(slot, p)
-            engine.cache = kv.prepare_write(slot, p, p, engine.cache)
-        logp, engine.cache = engine._decode_logits(
-            engine.params, engine.cache, jnp.asarray(engine.slot_tok),
-            jnp.asarray(engine.slot_pos), engine._block_table())
-        engine.decode_calls += 1
-        steps += 1
-        lp = np.asarray(logp)
+        with obs.span("beam.step", "serving", beams=len(live)):
+            for slot in sorted(live):
+                p = int(engine.slot_pos[slot])
+                kv.begin_write(slot, p, p)
+                kv.ensure(slot, p)
+                engine.cache = kv.prepare_write(slot, p, p, engine.cache)
+            logp, engine.cache = engine._decode_logits(
+                engine.params, engine.cache, jnp.asarray(engine.slot_tok),
+                jnp.asarray(engine.slot_pos), engine._block_table())
+            engine.decode_calls += 1
+            steps += 1
+            lp = np.asarray(logp)
         # global top-width over (beam score + token log-prob)
         room = width - len(done)
         cands: list[tuple[float, int, int]] = []   # (score, slot, token)

@@ -36,14 +36,15 @@ slot-granular engine does not do.
 
 from __future__ import annotations
 
-import time
 import warnings
+from contextlib import nullcontext as _nullcontext
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.runtime import ServingPolicy, current_session
 from repro.runtime import stack as _rt
 
@@ -61,9 +62,10 @@ class Request:
     deadline: float | None = None     # smaller = more urgent (scheduler)
     generated: list[int] = field(default_factory=list)
     done: bool = False
-    # engine-maintained bookkeeping
+    # engine-maintained bookkeeping (monotonic repro.obs.now timestamps)
     submit_time: float = 0.0
     first_token_time: float | None = None
+    token_times: list[float] = field(default_factory=list)
     admit_seq: int = -1               # admission order (victim selection)
     preemptions: int = 0
 
@@ -168,6 +170,17 @@ class ServeEngine:
         self.accepted_tokens = 0
         self.rejected_tokens = 0
         self.fork_counts: dict[int, int] = {}    # slot -> forks taken
+        # observability: the pinned session's tracer, or None (the off
+        # path is this one attribute check per site)
+        self._obs = obs.get_tracer(self.session)
+        if self._obs is not None:
+            m = self._obs.metrics
+            self._h_ttft = m.histogram("serving.ttft_s")
+            self._h_itl = m.histogram("serving.inter_token_s")
+            self._g_free = m.gauge("kv.free_blocks")
+            self._g_cow = m.gauge("kv.cow_copies")
+            self._g_prefix = m.gauge("kv.prefix_hits")
+            self._gauge_vals: tuple | None = None
 
     # -- jitted bodies -------------------------------------------------------
     def _decode_fn(self, params, cache, tok, pos, block_table):
@@ -217,9 +230,19 @@ class ServeEngine:
     def _block_table(self):
         return self.kv.device_table() if self.paged else None
 
+    def _span(self, name: str, **attrs):
+        """A tracer span when observability is on; free no-op otherwise."""
+        if self._obs is None:
+            return _nullcontext(None)
+        return self._obs.span(name, "serving", **attrs)
+
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request) -> None:
-        req.submit_time = time.time()
+        req.submit_time = obs.now()
+        if self._obs is not None:
+            self._obs.instant("request.submit", "serving",
+                              ts=req.submit_time, uid=req.uid,
+                              prompt_tokens=len(req.prompt))
         self.scheduler.submit(req)
 
     @property
@@ -284,6 +307,9 @@ class ServeEngine:
                     # for active slots to finish (or get evicted later)
                     self.kv.release(slot)
                     self._audit_kv()
+                    if self._obs is not None:
+                        self._obs.instant("request.requeue", "serving",
+                                          uid=req.uid, reason="admit-oom")
                     self.scheduler.requeue(req)
                     break
                 if shared:
@@ -293,6 +319,10 @@ class ServeEngine:
             self.active[slot] = req
             self.slot_pos[slot] = len(eff) - 1
             self.slot_tok[slot, 0] = eff[-1]
+            if self._obs is not None:
+                self._obs.instant("request.admit", "serving", uid=req.uid,
+                                  slot=slot, admit_seq=req.admit_seq,
+                                  prompt_tokens=len(eff), shared=shared)
             admitted.append((slot, req, eff, shared))
         if admitted:
             if self._chunked:
@@ -341,11 +371,13 @@ class ServeEngine:
                     toks[slot, :len(seg)] = seg
                     start[slot] = c
                     count[slot] = len(seg)
-                self.cache = self._prefill(self.params, self.cache,
-                                           jnp.asarray(toks),
-                                           jnp.asarray(start),
-                                           jnp.asarray(count), bt)
-                self.prefill_calls += 1
+                with self._span("serve.prefill_chunk", chunk_start=c,
+                                chunk=t, slots=len(plan)):
+                    self.cache = self._prefill(self.params, self.cache,
+                                               jnp.asarray(toks),
+                                               jnp.asarray(start),
+                                               jnp.asarray(count), bt)
+                    self.prefill_calls += 1
         if self.prefix_on:
             # device content for this round's registrations now exists
             for slot, _req, _eff, _shared in admitted:
@@ -358,15 +390,17 @@ class ServeEngine:
         # decode step would write the identical values — idempotent for
         # position-addressed attention caches.
         bt = self._block_table()
-        for i, tok in enumerate(eff[:-1]):
-            tkn = self.slot_tok.copy()
-            tkn[slot, 0] = tok
-            pos = self.slot_pos.copy()
-            pos[slot] = i
-            _, self.cache = self._decode(self.params, self.cache,
-                                         jnp.asarray(tkn), jnp.asarray(pos),
-                                         bt)
-            self.prefill_calls += 1
+        with self._span("serve.prefill_legacy", slot=slot,
+                        tokens=len(eff) - 1):
+            for i, tok in enumerate(eff[:-1]):
+                tkn = self.slot_tok.copy()
+                tkn[slot, 0] = tok
+                pos = self.slot_pos.copy()
+                pos[slot] = i
+                _, self.cache = self._decode(self.params, self.cache,
+                                             jnp.asarray(tkn),
+                                             jnp.asarray(pos), bt)
+                self.prefill_calls += 1
 
     # -- static audit --------------------------------------------------------
     def _audit_kv(self) -> None:
@@ -387,10 +421,16 @@ class ServeEngine:
         req = self.active.pop(slot)
         req.preemptions += 1
         self.preemptions += 1
+        if self._obs is not None:
+            self._obs.instant("request.preempt", "serving", uid=req.uid,
+                              slot=slot, generated=len(req.generated))
         self.kv.release(slot)
         if self.spec_on:
             self.proposer.release(slot)
         self._audit_kv()
+        if self._obs is not None:
+            self._obs.instant("request.requeue", "serving", uid=req.uid,
+                              reason="preempt")
         self.scheduler.requeue(req)
 
     def _ensure_capacity(self) -> None:
@@ -425,9 +465,12 @@ class ServeEngine:
         Plain mode emits one token per slot per step; speculative mode
         runs one draft-propose / wide-verify round emitting 1..k+1
         tokens per slot (token-for-token identical output)."""
-        if self.spec_on:
-            return self._spec_step()
-        return self._plain_step()
+        if self._obs is None:
+            if self.spec_on:
+                return self._spec_step()
+            return self._plain_step()
+        with self._obs.span("serve.step", "serving", step=self.steps):
+            return self._spec_step() if self.spec_on else self._plain_step()
 
     def _plain_step(self) -> list[Request]:
         self._admit()
@@ -437,19 +480,20 @@ class ServeEngine:
             self._ensure_capacity()
             if not self.active:
                 return []
-        tok = jnp.asarray(self.slot_tok)
-        pos = jnp.asarray(self.slot_pos)                 # per-slot positions
-        next_tok, self.cache = self._decode(self.params, self.cache, tok,
-                                            pos, self._block_table())
-        self.decode_calls += 1
-        next_np = np.asarray(next_tok)
-        now = time.time()
+        # the span covers dispatch AND the host sync (np.asarray), so its
+        # duration is the real step latency, not just dispatch time
+        with self._span("serve.decode_step", active=len(self.active)):
+            tok = jnp.asarray(self.slot_tok)
+            pos = jnp.asarray(self.slot_pos)             # per-slot positions
+            next_tok, self.cache = self._decode(self.params, self.cache, tok,
+                                                pos, self._block_table())
+            self.decode_calls += 1
+            next_np = np.asarray(next_tok)
+        now = obs.now()
         finished = []
         for slot, req in list(self.active.items()):
             t = int(next_np[slot, 0])
-            req.generated.append(t)
-            if req.first_token_time is None:
-                req.first_token_time = now
+            self._emit_token(req, t, now)
             self.slot_tok[slot, 0] = t
             self.slot_pos[slot] += 1
             if ((req.eos_id is not None and t == req.eos_id)
@@ -458,11 +502,52 @@ class ServeEngine:
                 req.done = True
                 finished.append(req)
                 del self.active[slot]
+                if self._obs is not None:
+                    self._obs.instant("request.done", "serving", ts=now,
+                                      uid=req.uid,
+                                      tokens=len(req.generated))
                 if self.paged:
                     self.kv.release(slot)
                     self._audit_kv()
+        self._sample_gauges()
         self.steps += 1
         return finished
+
+    def _emit_token(self, req: Request, t: int, now: float) -> None:
+        """Record one emitted token: benchmark-side fields (generated /
+        token_times / first_token_time) and — when observability is on —
+        the trace instants and latency histograms, all stamped with the
+        SAME clock sample so trace summaries and benchmark math agree."""
+        req.generated.append(t)
+        req.token_times.append(now)
+        first = req.first_token_time is None
+        if first:
+            req.first_token_time = now
+        if self._obs is not None:
+            self._obs.instant("request.token", "serving", ts=now,
+                              uid=req.uid, token=t)
+            if first:
+                self._obs.instant("request.first_token", "serving", ts=now,
+                                  uid=req.uid)
+                self._h_ttft.observe(now - req.submit_time)
+            else:
+                self._h_itl.observe(now - req.token_times[-2])
+
+    def _sample_gauges(self) -> None:
+        if self._obs is None or not self.paged:
+            return
+        # gauges also append a counter-track sample per set(); skip
+        # unchanged values so steady-state steps stay cheap
+        vals = (self.kv.usable_blocks - self.kv.blocks_in_use,
+                self.kv.cow_copies,
+                getattr(getattr(self.kv, "prefix_index", None), "hits", 0))
+        if vals == self._gauge_vals:
+            return
+        self._gauge_vals = vals
+        self._g_free.set(vals[0])
+        self._g_cow.set(vals[1])
+        if getattr(self.kv, "prefix_index", None) is not None:
+            self._g_prefix.set(vals[2])
 
     def _spec_step(self) -> list[Request]:
         """One draft-propose / wide-verify / rollback round.
@@ -493,7 +578,8 @@ class ServeEngine:
         width = k + 1
         contexts = {s: r.prompt + r.generated
                     for s, r in self.active.items()}
-        proposals = self.proposer.propose(contexts, k)
+        with self._span("serve.spec_propose", slots=len(contexts), k=k):
+            proposals = self.proposer.propose(contexts, k)
         counts: dict[int, tuple[int, list[int]]] = {}
         for s in list(self.active):
             props = [int(t) for t in proposals.get(s, [])][:k]
@@ -532,16 +618,18 @@ class ServeEngine:
             toks[s, :c] = span[:c]
             start[s] = self.slot_pos[s]
             count[s] = c
-        greedy, self.cache = self._verify(self.params, self.cache,
-                                          jnp.asarray(toks),
-                                          jnp.asarray(start),
-                                          jnp.asarray(count),
-                                          self._block_table())
-        self.verify_calls += 1
+        with self._span("serve.spec_verify", slots=len(self.active),
+                        width=width):
+            greedy, self.cache = self._verify(self.params, self.cache,
+                                              jnp.asarray(toks),
+                                              jnp.asarray(start),
+                                              jnp.asarray(count),
+                                              self._block_table())
+            self.verify_calls += 1
+            g = np.asarray(greedy)
         self.spec_rounds += 1
         self.slot_rounds += len(self.active)
-        g = np.asarray(greedy)
-        now = time.time()
+        now = obs.now()
         finished = []
         accepted_map: dict[int, int] = {}
         for slot, req in list(self.active.items()):
@@ -553,14 +641,16 @@ class ServeEngine:
             accepted_map[slot] = a
             self.accepted_tokens += a
             self.rejected_tokens += len(props) - a
+            if self._obs is not None:
+                self._obs.instant("spec.round", "serving", ts=now,
+                                  uid=req.uid, slot=slot, accepted=a,
+                                  rejected=len(props) - a)
             p0 = int(self.slot_pos[slot])
             done = False
             n_emit = 0
             for t in emit:
-                req.generated.append(t)
+                self._emit_token(req, t, now)
                 n_emit += 1
-                if req.first_token_time is None:
-                    req.first_token_time = now
                 if ((req.eos_id is not None and t == req.eos_id)
                         or len(req.generated) >= req.max_new_tokens
                         or p0 + n_emit >= self.max_seq - 1):
@@ -571,15 +661,24 @@ class ServeEngine:
             self.slot_tok[slot, 0] = emit[n_emit - 1]
             # truncate the rejected suffix: KV past new_pos-1 is
             # either unwritten (the bonus token) or rejected content
-            self.kv.rollback(slot, new_pos)
+            freed = self.kv.rollback(slot, new_pos)
+            if self._obs is not None and len(props) - a:
+                self._obs.instant("kv.rollback", "serving", ts=now,
+                                  uid=req.uid, slot=slot, pos=new_pos,
+                                  blocks_freed=freed)
             if done:
                 req.done = True
                 finished.append(req)
                 del self.active[slot]
+                if self._obs is not None:
+                    self._obs.instant("request.done", "serving", ts=now,
+                                      uid=req.uid,
+                                      tokens=len(req.generated))
                 self.kv.release(slot)
                 self.proposer.release(slot)
                 self._audit_kv()
         self.proposer.commit(accepted_map)
+        self._sample_gauges()
         self.steps += 1
         return finished
 
@@ -594,6 +693,8 @@ class ServeEngine:
         self.slot_pos[dst] = self.slot_pos[src]
         self.slot_tok[dst] = self.slot_tok[src]
         self.fork_counts[src] = self.fork_counts.get(src, 0) + 1
+        if self._obs is not None:
+            self._obs.instant("kv.fork", "serving", src=src, dst=dst)
 
     def run_until_done(self, max_steps: int = 10000) -> list[Request]:
         out = []

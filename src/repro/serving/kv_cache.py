@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.core.memory import telemetry
 from repro.core.memory.manager import (BumpMemoryManager,
                                        CachingMemoryManager,
                                        MemoryManagerAdapter, OutOfMemory)
@@ -141,6 +143,9 @@ class PagedKVCache:
         self.forks = 0
         self._leaf_axes_cache: list[int | None] | None = None
         self.cow_copies = 0
+        # ambient tracer at construction (the engine builds its cache
+        # inside the serving session); None = observability off
+        self._obs = obs.get_tracer()
         # reserve physical block 0 as the trash block, never freed
         ptr0 = self.manager.alloc(self.block_bytes)
         if ptr0 // self.block_bytes != 0:
@@ -176,6 +181,10 @@ class PagedKVCache:
                     raise
         bid = ptr // self.block_bytes
         self.refcount[bid] = 1
+        # bridge into the allocation-telemetry stream (negative uid
+        # namespace: KV block ids must not collide with LazyTensor uids
+        # in a recording that spans both sources)
+        telemetry.record_alloc(-(bid + 1), self.block_bytes, tag="kv.block")
         return bid, ptr
 
     def _decref(self, bid: int) -> None:
@@ -185,6 +194,7 @@ class PagedKVCache:
         else:
             self.refcount.pop(bid, None)
             self.manager.unlock(bid * self.block_bytes)
+            telemetry.record_free(-(bid + 1))
 
     def _evict_prefix(self, n: int) -> bool:
         """Drop up to ``n`` LRU radix leaves nobody maps (refcount 1 =
@@ -210,6 +220,17 @@ class PagedKVCache:
                 f"position {pos} exceeds max_seq={self.max_seq} "
                 f"({self.max_blocks} blocks/slot)")
         held = self._blocks.setdefault(slot, [])
+        if len(held) >= need:
+            return
+        if self._obs is None:
+            self._grow(slot, held, need)
+        else:
+            with self._obs.span("kv.grow", "memory", slot=slot,
+                                blocks=need - len(held)):
+                self._grow(slot, held, need)
+
+    def _grow(self, slot: int, held: list[tuple[int, int]],
+              need: int) -> None:
         while len(held) < need:
             bid, ptr = self._alloc_block()
             self.table[slot, len(held)] = bid

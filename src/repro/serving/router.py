@@ -27,6 +27,7 @@ from __future__ import annotations
 import itertools
 from typing import Any, Callable, Iterable, Iterator, Protocol, Sequence, Union
 
+from repro import obs
 from repro.runtime import ServingPolicy, current_session
 
 from .engine import Request, ServeEngine
@@ -148,6 +149,12 @@ class Router:
         self.routing = make_routing(routing)
         self.routed: dict[int, int] = {}          # request uid -> replica
         self.steps = 0
+        # ambient tracer, falling back to any replica's (replicas built
+        # inside an obs session, router constructed outside it)
+        self._obs = obs.get_tracer()
+        if self._obs is None:
+            self._obs = next((e._obs for e in self.engines
+                              if getattr(e, "_obs", None) is not None), None)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request) -> int:
@@ -156,6 +163,10 @@ class Router:
         if not 0 <= i < len(self.engines):
             raise ValueError(f"routing policy {self.routing.name!r} "
                              f"returned replica {i} of {len(self.engines)}")
+        if self._obs is not None:
+            self._obs.instant("router.place", "serving", uid=req.uid,
+                              replica=i, policy=self.routing.name)
+            self._obs.metrics.counter(f"router.placed.replica{i}").add()
         self.engines[i].submit(req)
         self.routed[req.uid] = i
         return i

@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 class Proposer:
     """Base proposer: stateless, proposes nothing (plain decode)."""
@@ -217,6 +219,12 @@ class ModelDraft(Proposer):
     # -- propose / commit ----------------------------------------------------
     def propose(self, contexts: dict[int, list[int]],
                 k: int) -> dict[int, list[int]]:
+        with obs.span("spec.draft_propose", "serving",
+                      slots=len(contexts), k=k):
+            return self._propose(contexts, k)
+
+    def _propose(self, contexts: dict[int, list[int]],
+                 k: int) -> dict[int, list[int]]:
         active = sorted(contexts)
         base = self.cache
         tok = np.zeros((self.slots, 1), np.int32)
